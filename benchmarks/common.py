@@ -1,0 +1,46 @@
+"""Shared benchmark scaffolding.
+
+Every module reproduces one paper table/figure and prints
+``name,us_per_call,derived`` CSV rows (derived = the figure's own metric).
+Scale knobs: BENCH_SCALE (graph size multiplier) and BENCH_FAST=1 trims the
+grid for CI-speed runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.study import StudyCache
+from repro.gnn.models import GNNSpec
+
+SCALE = float(os.environ.get("BENCH_SCALE", "0.1"))
+FAST = os.environ.get("BENCH_FAST", "1") != "0"
+
+GRAPHS = ["OR", "EN", "EU", "DI", "HO"] if not FAST else ["OR", "EU", "DI"]
+KS = (4, 32) if not FAST else (4, 8)
+# paper Table 2 grid (trimmed in FAST mode)
+FEATURES = (16, 64, 512) if not FAST else (16, 512)
+HIDDENS = (16, 64, 512) if not FAST else (16, 64)
+LAYERS = (2, 3, 4) if not FAST else (2, 3)
+
+_CACHE = StudyCache()
+
+
+def cache() -> StudyCache:
+    return _CACHE
+
+
+def spec(model="sage", feature=64, hidden=64, layers=2) -> GNNSpec:
+    return GNNSpec(model=model, feature_dim=feature, hidden_dim=hidden,
+                   num_classes=16, num_layers=layers)
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

@@ -1,0 +1,32 @@
+"""Paper Fig. 12: DistGNN effectiveness vs scale-out factor. Claims: speedup
+and memory savings INCREASE with more machines (edge partitioning); RF in %
+of random falls with k."""
+
+import numpy as np
+
+from benchmarks.common import SCALE, cache, emit, spec
+from repro.core.study import fullbatch_row, fullbatch_speedup
+
+
+def main() -> None:
+    c = cache()
+    s = spec(feature=512, hidden=64, layers=2)
+    ks = (4, 8, 16, 32)
+    for m in ["dbh", "hdrf", "hep100"]:
+        sps, rf_pcts = [], []
+        for k in ks:
+            rows = [fullbatch_row("OR", mm, k, s, scale=SCALE, cache=c)
+                    for mm in ("random", m)]
+            sp = {r["method"]: r for r in fullbatch_speedup(rows)}
+            sps.append(sp[m]["speedup"])
+            rf_pct = 100 * sp[m]["rf"] / sp["random"]["rf"]
+            rf_pcts.append(rf_pct)
+            emit(f"fig12.{m}.k{k}", 0.0,
+                 f"speedup={sps[-1]:.3f};rf_pct_random={rf_pct:.1f}")
+        emit(f"fig12.claims.{m}", 0.0,
+             f"speedup_increases={sps[-1] >= sps[0]};"
+             f"rf_pct_falls={rf_pcts[-1] <= rf_pcts[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 13: edge-cut ratio per vertex partitioner x graph x k.
+Claims: kahip/metis lowest cut, random highest; cut grows with k; the road
+network DI gets a far lower cut than the power-law graphs."""
+
+from benchmarks.common import GRAPHS, KS, SCALE, cache, emit, timed
+from repro.core.study import VERTEX_METHODS
+
+
+def main() -> None:
+    c = cache()
+    cuts = {}
+    for gk in GRAPHS:
+        g = c.graph(gk, SCALE)
+        for k in KS:
+            for m in VERTEX_METHODS:
+                rec, dt = timed(lambda m=m, k=k: c.vertex_partition(g, m, k))
+                cuts[(gk, k, m)] = rec.metrics.edge_cut
+                emit(f"fig13.cut.{gk}.k{k}.{m}", dt,
+                     f"cut={cuts[(gk, k, m)]:.4f}")
+    k = KS[0]
+    best_low = all(
+        min(cuts[(gk, k, "kahip")], cuts[(gk, k, "metis")])
+        <= cuts[(gk, k, "random")]
+        for gk in GRAPHS
+    )
+    grows = all(
+        cuts[(gk, KS[-1], m)] >= cuts[(gk, KS[0], m)] * 0.9
+        for gk in GRAPHS for m in VERTEX_METHODS
+    )
+    di_low = ("DI" not in [g for g in GRAPHS]) or (
+        cuts[("DI", k, "metis")] < min(
+            cuts[(gk, k, "metis")] for gk in GRAPHS if gk != "DI")
+    )
+    emit("fig13.claims", 0.0,
+         f"quality_ordering={best_low};cut_grows_with_k={grows};"
+         f"road_graph_lowest={di_low}")
+
+
+if __name__ == "__main__":
+    main()

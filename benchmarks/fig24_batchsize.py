@@ -1,0 +1,39 @@
+"""Paper Fig. 24 (§5.4): influence of the mini-batch size.
+
+Claims: with a high feature size the partitioner keeps a clear advantage at
+every batch size (net traffic well below random's). NOTE (scale artifact,
+documented in EXPERIMENTS.md §Deviations): the paper's *falling* net%%random
+trend requires paper-scale graphs (3M vertices); at CPU-tractable scale even
+moderate batches touch most of the graph, so overlap saturates for the good
+partitioner first and the ratio plateaus/rises instead. We validate the
+batch-size-independent advantage and report the measured trend."""
+
+from benchmarks.common import SCALE, cache, emit, spec
+from repro.core.study import minibatch_row, minibatch_speedup
+
+
+def main() -> None:
+    c = cache()
+    s = spec(feature=512, hidden=64, layers=3)
+    k = 8
+    # larger graph for this figure: batch-size overlap effects saturate on
+    # small graphs (every batch covers the whole graph)
+    scale = max(SCALE, 0.25)
+    net_pcts, sps = [], []
+    for gb in (64, 512):
+        rows = [minibatch_row("OR", m, k, s, scale=scale, cache=c,
+                              global_batch=gb, steps=2)
+                for m in ("random", "kahip")]
+        sp = {r["method"]: r for r in minibatch_speedup(rows)}
+        net_pcts.append(sp["kahip"]["net_pct_random"])
+        sps.append(sp["kahip"]["speedup"])
+        emit(f"fig24.kahip.batch{gb}", 0.0,
+             f"net_pct_random={net_pcts[-1]:.1f};speedup={sps[-1]:.3f}")
+    emit("fig24.claims", 0.0,
+         f"advantage_at_all_batch_sizes={all(p < 100 for p in net_pcts)};"
+         f"speedup_gt1_at_all={all(s > 1 for s in sps)};"
+         f"net_pct_trend={'falls' if net_pcts[-1] <= net_pcts[0] else 'saturates(scale_artifact)'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig. 2: replication factors per edge partitioner x graph x k.
+Claim: HEP100 lowest, Random highest; RF grows with k."""
+
+from benchmarks.common import GRAPHS, KS, SCALE, cache, emit, timed
+from repro.core.study import EDGE_METHODS
+
+
+def main() -> None:
+    c = cache()
+    ok = True
+    for gk in GRAPHS:
+        g = c.graph(gk, SCALE)
+        for k in KS:
+            rfs = {}
+            for m in EDGE_METHODS:
+                rec, dt = timed(lambda m=m: c.edge_partition(g, m, k))
+                rfs[m] = rec.metrics.replication_factor
+                emit(f"fig2.rf.{gk}.k{k}.{m}", dt,
+                     f"rf={rfs[m]:.3f}")
+            ok &= rfs["hep100"] <= rfs["random"]
+            ok &= rfs["hdrf"] <= rfs["random"]
+        # RF grows with k for every method
+        for m in EDGE_METHODS:
+            rf_small = c.edge_partition(g, m, KS[0]).metrics.replication_factor
+            rf_large = c.edge_partition(g, m, KS[-1]).metrics.replication_factor
+            ok &= rf_large >= rf_small * 0.95
+    emit("fig2.claims", 0.0, f"validated={ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig. 6/15: partitioning time per algorithm and k (log scale in the
+paper). Claims: streaming (random/dbh/2ps-l) nearly k-independent; hdrf grows
+with k; in-memory vertex partitioners slowest, kahip the slowest of all."""
+
+from benchmarks.common import KS, SCALE, cache, emit
+from repro.core.study import EDGE_METHODS, VERTEX_METHODS
+
+
+def main() -> None:
+    c = cache()
+    g = c.graph("EU", SCALE)
+    times = {}
+    for k in KS:
+        for m in EDGE_METHODS:
+            rec = c.edge_partition(g, m, k)
+            times[(m, k)] = rec.partition_time
+            emit(f"fig6.edge.{m}.k{k}", rec.partition_time, "")
+        for m in VERTEX_METHODS:
+            rec = c.vertex_partition(g, m, k)
+            times[(m, k)] = rec.partition_time
+            emit(f"fig15.vertex.{m}.k{k}", rec.partition_time, "")
+    k0, k1 = KS[0], KS[-1]
+    hdrf_growth = times[("hdrf", k1)] / max(times[("hdrf", k0)], 1e-9)
+    kahip_slowest = times[("kahip", k0)] >= max(
+        times[(m, k0)] for m in ("ldg", "spinner", "bytegnn"))
+    emit("fig6.claims", 0.0,
+         f"hdrf_growth_x={hdrf_growth:.1f};kahip_slowest={kahip_slowest}")
+
+
+if __name__ == "__main__":
+    main()

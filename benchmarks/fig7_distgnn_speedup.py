@@ -1,0 +1,37 @@
+"""Paper Fig. 7 + §4.3: DistGNN (full-batch) speedup distribution over the
+GNN-parameter grid. Claims: HEP100 largest speedups; heavy-weight
+partitioners beat streaming ones; speedups grow with k (Fig. 12a)."""
+
+import numpy as np
+
+from benchmarks.common import FEATURES, HIDDENS, KS, LAYERS, SCALE, cache, emit, spec
+from repro.core.study import EDGE_METHODS, fullbatch_row, fullbatch_speedup
+
+
+def main() -> None:
+    c = cache()
+    rows = []
+    for k in KS:
+        for f in FEATURES:
+            for h in HIDDENS:
+                for l in LAYERS:
+                    s = spec(feature=f, hidden=h, layers=l)
+                    for m in EDGE_METHODS:
+                        rows.append(fullbatch_row(
+                            "OR", m, k, s, scale=SCALE, cache=c))
+    sp = fullbatch_speedup(rows)
+    by = {}
+    for r in sp:
+        by.setdefault((r["method"], r["k"]), []).append(r["speedup"])
+    for (m, k), vals in sorted(by.items()):
+        emit(f"fig7.speedup.OR.k{k}.{m}", 0.0,
+             f"mean={np.mean(vals):.3f};max={np.max(vals):.3f}")
+    k0, k1 = KS[0], KS[-1]
+    hep_best = np.mean(by[("hep100", k1)]) >= np.mean(by[("dbh", k1)])
+    grows = np.mean(by[("hep100", k1)]) >= np.mean(by[("hep100", k0)])
+    emit("fig7.claims", 0.0,
+         f"hep100_beats_streaming={hep_best};speedup_grows_with_k={grows}")
+
+
+if __name__ == "__main__":
+    main()

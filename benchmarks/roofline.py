@@ -1,0 +1,52 @@
+"""Assignment §Roofline: three-term roofline per (arch x shape) on the
+single-pod 16x16 mesh, read from the dry-run cache (dryrun_results.json).
+
+Prints, per cell: compute/memory/collective seconds (analytic model,
+repro.dist.costs), the dominant term, MODEL_FLOPS=6ND (or 2ND), the
+useful-flops ratio, peak bytes/device from the compiled memory analysis,
+plus the HLO-derived terms as the compiled cross-check.
+"""
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "/root/repo/dryrun_results.json")
+
+
+def main() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline.missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    cells = {k: v for k, v in sorted(results.items())
+             if "error" not in v and v.get("mesh") == "16x16"}
+    fits = 0
+    for key, v in cells.items():
+        r = v["roofline"]
+        peak_gib = v["bytes_per_device"]["peak"] / 2**30
+        fits += peak_gib <= 16.0
+        # optimized §Perf variants are stored under "...|<strategy>" keys
+        variant = ".{}".format(key.split("|")[3]) if key.count("|") >= 3 else ""
+        emit(
+            f"roofline.{v['arch']}.{v['shape']}{variant}", r["bound_s"],
+            f"dom={r['dominant']};c_ms={r['compute_s']*1e3:.2f};"
+            f"m_ms={r['memory_s']*1e3:.2f};n_ms={r['collective_s']*1e3:.2f};"
+            f"mfu_bound={r['mfu_bound']:.3f};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"peak_GiB={peak_gib:.2f};"
+            f"hlo_coll_ms={v['roofline_hlo']['collective_s']*1e3:.2f}",
+        )
+    multi = {k: v for k, v in results.items()
+             if "error" not in v and v.get("mesh") == "2x16x16"}
+    emit("roofline.summary", 0.0,
+         f"single_pod_cells={len(cells)};fits_16GiB={fits};"
+         f"multi_pod_cells={len(multi)};"
+         f"multi_pod_ok={sum(1 for v in multi.values() if 'error' not in v)}")
+
+
+if __name__ == "__main__":
+    main()

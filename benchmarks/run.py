@@ -1,0 +1,46 @@
+"""Run every paper-figure/table benchmark. Prints name,us_per_call,derived
+CSV. One module per paper artifact (DESIGN.md §8); roofline reads the
+dry-run cache."""
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig2_replication_factor",
+    "benchmarks.fig3_rf_network",
+    "benchmarks.fig4_vertex_balance",
+    "benchmarks.fig6_partitioning_time",
+    "benchmarks.fig7_distgnn_speedup",
+    "benchmarks.fig10_memory",
+    "benchmarks.fig12_scaleout_distgnn",
+    "benchmarks.fig13_edgecut",
+    "benchmarks.fig14_minibatch_balance",
+    "benchmarks.fig16_distdgl_speedup",
+    "benchmarks.fig19_phase_times",
+    "benchmarks.fig22_scaleout_distdgl",
+    "benchmarks.fig24_batchsize",
+    "benchmarks.tab3_amortization",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        t0 = time.perf_counter()
+        try:
+            importlib.import_module(name).main()
+            print(f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},ok")
+        except Exception:
+            failures += 1
+            print(f"{name}.total,0,FAILED")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

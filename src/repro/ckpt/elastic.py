@@ -1,0 +1,55 @@
+"""Elastic scaling utilities.
+
+LM side: checkpoints are saved unsharded (ckpt/checkpoint.py), so restoring
+onto a different mesh is just re-placement with the new shardings —
+`reshard_tree` below is the helper the launcher calls after building the new
+mesh. GNN side: scaling from k to k' machines re-partitions the graph (the
+partition is preprocessing state, not model state) and rebuilds the device
+blocks; model parameters transfer unchanged because they are
+partition-independent (the tested distributed==single invariant).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.edge_partition import partition_edges
+from repro.gnn.fullbatch import FullBatchTrainer
+from repro.gnn.models import GNNSpec
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """Re-place every leaf for a new mesh (LM elastic restart)."""
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(np.asarray(jax.device_get(leaf)), sh),
+        tree,
+        shardings,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, jax.sharding.Sharding),
+    )
+
+
+def rescale_fullbatch(
+    trainer: FullBatchTrainer,
+    graph: Graph,
+    new_k: int,
+    features: np.ndarray,
+    labels: np.ndarray,
+    train_mask: np.ndarray,
+    *,
+    partitioner: str = "hep100",
+    seed: int = 0,
+) -> FullBatchTrainer:
+    """Scale a full-batch GNN trainer from k to new_k machines: re-partition
+    the graph, rebuild device blocks, carry the model/optimizer state over."""
+    assignment = partition_edges(graph, new_k, partitioner, seed=seed)
+    new = FullBatchTrainer.build(
+        graph, assignment, new_k, trainer.spec, features, labels, train_mask,
+        sync_mode=trainer.sync_mode, mode=trainer.mode, seed=seed,
+    )
+    new.params = trainer.params        # model state is partition-independent
+    new.opt_state = trainer.opt_state
+    return new

@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    list_archs,
+    smoke_config,
+)

@@ -1,0 +1,30 @@
+"""qwen3-4b [hf:Qwen/Qwen3-*]: dense, GQA kv=8, qk_norm, head_dim=128."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b",
+    family="dense",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen3-4b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=160,
+    vocab_size=256,
+    qk_norm=True,
+)

@@ -1,0 +1,26 @@
+"""yi-6b [arXiv:2403.04652]: llama-arch dense, GQA kv=4."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=5e6,
+)
+
+SMOKE = ArchConfig(
+    name="yi-6b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=160,
+    vocab_size=256,
+)

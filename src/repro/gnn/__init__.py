@@ -1,0 +1,1 @@
+from repro.gnn.models import GNNSpec, init_params  # noqa: F401

@@ -1,0 +1,184 @@
+"""DistGNN-style full-batch distributed GNN training (edge partitioning).
+
+The per-device program (models.py + sync.py) is identical across three
+execution modes:
+
+  mode="sim"       jax.vmap(axis_name=AXIS) over the stacked [k, ...] blocks
+                   — exact SPMD semantics on a single host device. This is
+                   how the paper's 4..32-machine experiments run inside this
+                   CPU container: the collectives are real (vmap implements
+                   them), only the transport is local.
+  mode="shard_map" jax.shard_map over a real mesh axis — the production
+                   path; also what the multi-pod dry-run lowers.
+  k == 1           the single-machine oracle (LocalSync), used as the
+                   correctness reference: distributed == single, allclose.
+
+The trainer measures, per step: loss, collective bytes (analytic, verified
+against dry-run HLO), and per-partition compute cost proxies — feeding the
+paper's speedup/memory analysis (core/cost_model.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition_book import EdgePartitionBook, build_edge_book
+from repro.gnn import models
+from repro.gnn.models import GNNSpec
+from repro.gnn.sync import Block, build_blocks, make_sync, sync_bytes_per_round
+from repro.optim import adam_init, adam_update
+
+AXIS = "parts"
+
+
+@dataclasses.dataclass
+class FullBatchTrainer:
+    spec: GNNSpec
+    book: EdgePartitionBook
+    blocks: Block                      # stacked [k, ...]
+    sync_mode: str = "halo"            # halo | dense
+    mode: str = "sim"                  # sim | shard_map
+    mesh: Optional[jax.sharding.Mesh] = None
+    params: Any = None
+    opt_state: Any = None
+    lr: float = 1e-2
+
+    # ---------------------------------------------------------------- setup
+    @classmethod
+    def build(
+        cls,
+        graph: Graph,
+        edge_assignment: np.ndarray,
+        k: int,
+        spec: GNNSpec,
+        features: np.ndarray,
+        labels: np.ndarray,
+        train_mask: np.ndarray,
+        *,
+        sync_mode: str = "halo",
+        mode: str = "sim",
+        mesh: Optional[jax.sharding.Mesh] = None,
+        seed: int = 0,
+        lr: float = 1e-2,
+    ) -> "FullBatchTrainer":
+        book = build_edge_book(graph, edge_assignment, k)
+        blocks = build_blocks(book, features, labels, train_mask)
+        params = models.init_params(spec, seed=seed)
+        return cls(
+            spec=spec, book=book, blocks=blocks, sync_mode=sync_mode,
+            mode=mode, mesh=mesh, params=params, opt_state=adam_init(params),
+            lr=lr,
+        )
+
+    # ------------------------------------------------------------- plumbing
+    def _per_device_loss(self, params, blk: Block) -> jnp.ndarray:
+        sync_mode = "local" if self.book.k == 1 else self.sync_mode
+        sync = make_sync(sync_mode, blk, self.book.num_vertices, AXIS)
+        return models.loss_fn(self.spec, params, blk.x, blk, sync)
+
+    def _wrap(self, fn):
+        """Run a (params, stacked_blocks) function in the chosen mode."""
+        if self.book.k == 1:
+            return lambda params, blocks: fn(
+                params, jax.tree.map(lambda a: a[0], blocks)
+            )
+        if self.mode == "sim":
+            return jax.vmap(fn, in_axes=(None, 0), axis_name=AXIS)
+        assert self.mesh is not None, "shard_map mode needs a mesh"
+        P = jax.sharding.PartitionSpec
+
+        def per_device(params, blocks_local):
+            # shard_map keeps the sharded leading dim as size 1 (vmap strips
+            # it) — squeeze in, unsqueeze out
+            blk = jax.tree.map(lambda a: a[0], blocks_local)
+            out = fn(params, blk)
+            return jax.tree.map(lambda a: a[None], out)
+
+        return jax.shard_map(
+            per_device,
+            mesh=self.mesh,
+            in_specs=(P(), P(AXIS)),
+            out_specs=P(AXIS),
+            check_vma=False,
+        )
+
+    # ----------------------------------------------------------------- api
+    @functools.cached_property
+    def _train_step(self):
+        def loss_of(params, blocks):
+            losses = self._wrap(self._per_device_loss)(params, blocks)
+            return jnp.mean(losses)
+
+        def step(params, opt_state, blocks):
+            loss, grads = jax.value_and_grad(loss_of)(params, blocks)
+            new_params, new_state = adam_update(
+                grads, opt_state, params, lr=self.lr
+            )
+            return loss, new_params, new_state
+
+        return jax.jit(step)
+
+    @functools.cached_property
+    def _forward(self):
+        def fwd(params, blk: Block):
+            sync_mode = "local" if self.book.k == 1 else self.sync_mode
+            sync = make_sync(sync_mode, blk, self.book.num_vertices, AXIS)
+            return models.forward(self.spec, params, blk.x, blk, sync)
+
+        return jax.jit(lambda params, blocks: self._wrap(fwd)(params, blocks))
+
+    def train_step(self) -> float:
+        loss, self.params, self.opt_state = self._train_step(
+            self.params, self.opt_state, self.blocks
+        )
+        return float(loss)
+
+    def forward_logits_global(self) -> np.ndarray:
+        """Master-row logits gathered to a global [V, C] array (testing)."""
+        out = self._forward(self.params, self.blocks)
+        if self.book.k == 1:
+            out = out[None]
+        return self.book.scatter_to_global(np.asarray(out))
+
+    # ------------------------------------------------------------- accounting
+    def comm_bytes_per_epoch(self) -> int:
+        """Analytic collective traffic of one full-batch epoch (fwd+bwd).
+
+        Backward of a reduce+broadcast pair is another broadcast+reduce pair
+        -> 2x forward volume. GAT syncs 3 aggregates/layer, SAGE/GCN 1.
+        """
+        syncs_per_layer = 3 if self.spec.model == "gat" else 1
+        dims = [d_out for _, d_out in self.spec.dims()]
+        total = 0
+        for d_out in dims:
+            per = sync_bytes_per_round(self.book, d_out, self.sync_mode)
+            total += syncs_per_layer * per * 2  # fwd + bwd
+        # gradient all-reduce of the (replicated) model parameters
+        n_params = sum(
+            int(np.prod(p.shape)) for p in jax.tree.leaves(self.params)
+        )
+        total += 2 * self.book.k * n_params * 4
+        return total
+
+    def memory_bytes_per_partition(self) -> np.ndarray:
+        """Analytic per-partition training memory (features + activations +
+        graph structure), the quantity behind the paper's Fig. 10/11."""
+        k = self.book.k
+        f = self.spec.feature_dim
+        h = self.spec.hidden_dim
+        L = self.spec.num_layers
+        verts = self.book.vmask.sum(axis=1)  # true local vertices
+        edges = self.book.emask.sum(axis=1)
+        feat = verts * f * 4
+        # stored activations: one [Vloc, hidden] per layer (backward needs them)
+        acts = verts * h * 4 * L
+        structure = edges * 2 * 4
+        halo = 2 * k * self.book.bucket * max(f, h) * 4
+        return (feat + acts + structure + halo).astype(np.int64)

@@ -1,0 +1,215 @@
+"""GNN models (GraphSAGE / GCN / GAT) as per-device JAX functions.
+
+Every function here operates on ONE partition's local block:
+
+  x      [Vloc+1, F]   local vertex states (last row = dummy/padding sink)
+  esrc   [Eloc]        local src indices (pad -> dummy row)
+  edst   [Eloc]        local dst indices
+  degree [Vloc+1]      *global* symmetric degree of each local vertex
+  master [Vloc+1]      bool, true where this partition owns the vertex
+
+plus a `sync` object (repro.gnn.sync.ReplicaSync) that completes partial
+aggregates across partitions. With the `LocalSync` no-op the same code is the
+exact single-machine model — that equivalence is the core system invariant
+and is tested (distributed forward == single-device forward, allclose).
+
+Aggregation is over the symmetrised adjacency: each stored edge (u, v)
+produces messages u->v and v->u (DGL-on-undirected semantics, which both
+DistGNN and the paper's DistDGL setup use).
+
+Models follow the paper's setup (§4.1/§5.1): GraphSAGE (mean), GCN, GAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNSpec:
+    model: str = "sage"          # sage | gcn | gat
+    feature_dim: int = 64
+    hidden_dim: int = 64
+    num_classes: int = 16
+    num_layers: int = 2
+    gat_heads: int = 4
+
+    def dims(self) -> list[tuple[int, int]]:
+        ins = [self.feature_dim] + [self.hidden_dim] * (self.num_layers - 1)
+        outs = [self.hidden_dim] * (self.num_layers - 1) + [self.num_classes]
+        return list(zip(ins, outs))
+
+
+def _glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> jnp.ndarray:
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jnp.asarray(rng.uniform(-limit, limit, size=shape), dtype=jnp.float32)
+
+
+def init_params(spec: GNNSpec, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    layers = []
+    for li, (din, dout) in enumerate(spec.dims()):
+        if spec.model == "sage":
+            layers.append({
+                "w_self": _glorot(rng, (din, dout)),
+                "w_neigh": _glorot(rng, (din, dout)),
+                "b": jnp.zeros((dout,), jnp.float32),
+            })
+        elif spec.model == "gcn":
+            layers.append({
+                "w": _glorot(rng, (din, dout)),
+                "b": jnp.zeros((dout,), jnp.float32),
+            })
+        elif spec.model == "gat":
+            h = spec.gat_heads
+            dh = max(dout // h, 1)
+            layers.append({
+                "w": _glorot(rng, (din, h * dh)),
+                "a_src": _glorot(rng, (h, dh)),
+                "a_dst": _glorot(rng, (h, dh)),
+                "b": jnp.zeros((h * dh,), jnp.float32),
+                "w_out": (_glorot(rng, (h * dh, dout))
+                          if h * dh != dout else jnp.eye(h * dh, dtype=jnp.float32)),
+            })
+        else:
+            raise ValueError(f"unknown model {spec.model!r}")
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Aggregation primitives (local partials; `sync` completes them globally)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_sum_bidir(values_src, values_dst, esrc, edst, num_rows):
+    """Sum messages over the symmetrised edge list into vertex rows.
+
+    values_src: [E, d] message carried by the edge toward `edst`
+    values_dst: [E, d] message toward `esrc` (reverse direction)
+    Padding edges point at the dummy row (num_rows-1) and carry zeros.
+    """
+    out = jnp.zeros((num_rows, values_src.shape[-1]), values_src.dtype)
+    out = out.at[edst].add(values_src)
+    out = out.at[esrc].add(values_dst)
+    return out
+
+
+def sage_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+    n = x.shape[0]
+    msg = x[blk.esrc] * blk.emask[:, None]
+    msg_rev = x[blk.edst] * blk.emask[:, None]
+    agg = _scatter_sum_bidir(msg, msg_rev, blk.esrc, blk.edst, n)
+    agg = sync.reduce_sum(agg)          # mirrors' partials -> masters
+    agg = sync.broadcast(agg)           # masters' totals  -> mirrors
+    mean = agg / jnp.maximum(blk.degree, 1.0)[:, None]
+    h = x @ p["w_self"] + mean @ p["w_neigh"] + p["b"]
+    return h if final else jax.nn.relu(h)
+
+
+def gcn_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+    n = x.shape[0]
+    dnorm = 1.0 / jnp.sqrt(blk.degree + 1.0)  # self-loop-augmented degree
+    msg = (x * dnorm[:, None])[blk.esrc] * blk.emask[:, None]
+    msg_rev = (x * dnorm[:, None])[blk.edst] * blk.emask[:, None]
+    agg = _scatter_sum_bidir(msg, msg_rev, blk.esrc, blk.edst, n)
+    # Self-loop term once per vertex: gate by master so replicas don't
+    # double-count it in the cross-partition reduction.
+    self_term = x * (dnorm * dnorm)[:, None] * blk.master[:, None]
+    agg = agg + self_term
+    agg = sync.reduce_sum(agg)
+    agg = sync.broadcast(agg)
+    h = (agg * dnorm[:, None]) @ p["w"] + p["b"]
+    return h if final else jax.nn.relu(h)
+
+
+def gat_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+    n = x.shape[0]
+    h_heads, dh = p["a_src"].shape
+    z = (x @ p["w"]).reshape(n, h_heads, dh)
+    s_src = jnp.einsum("nhd,hd->nh", z, p["a_src"])  # [n, H]
+    s_dst = jnp.einsum("nhd,hd->nh", z, p["a_dst"])
+
+    neg_inf = jnp.asarray(-1e30, x.dtype)
+
+    def masked(e):
+        return jnp.where(blk.emask[:, None], e, neg_inf)
+
+    # scores for u->v and v->u over the symmetrised edge list
+    e_fwd = masked(jax.nn.leaky_relu(s_src[blk.esrc] + s_dst[blk.edst], 0.2))
+    e_rev = masked(jax.nn.leaky_relu(s_src[blk.edst] + s_dst[blk.esrc], 0.2))
+    e_self = jnp.where(blk.master[:, None],
+                       jax.nn.leaky_relu(s_src + s_dst, 0.2), neg_inf)
+
+    # 1) global max per destination (for a stable softmax)
+    m = jnp.full((n, h_heads), neg_inf, x.dtype)
+    m = m.at[blk.edst].max(e_fwd)
+    m = m.at[blk.esrc].max(e_rev)
+    m = jnp.maximum(m, e_self)
+    m = sync.reduce_max(m)
+    m = sync.broadcast(m)
+    m_safe = jnp.maximum(m, -1e29)  # isolated vertices
+
+    # 2) global sum of exp
+    w_fwd = jnp.exp(e_fwd - m_safe[blk.edst]) * blk.emask[:, None]
+    w_rev = jnp.exp(e_rev - m_safe[blk.esrc]) * blk.emask[:, None]
+    w_self = jnp.exp(e_self - m_safe) * blk.master[:, None]
+    den = jnp.zeros((n, h_heads), x.dtype)
+    den = den.at[blk.edst].add(w_fwd)
+    den = den.at[blk.esrc].add(w_rev)
+    den = den + w_self
+    den = sync.reduce_sum(den)
+    den = sync.broadcast(den)
+    den = jnp.maximum(den, 1e-16)
+
+    # 3) attention-weighted aggregate
+    num = jnp.zeros((n, h_heads, dh), x.dtype)
+    num = num.at[blk.edst].add(w_fwd[:, :, None] * z[blk.esrc])
+    num = num.at[blk.esrc].add(w_rev[:, :, None] * z[blk.edst])
+    num = num + w_self[:, :, None] * z
+    num = sync.reduce_sum(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
+    num = sync.broadcast(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
+
+    out = (num / den[:, :, None]).reshape(n, h_heads * dh) + p["b"]
+    out = out @ p["w_out"]
+    return out if final else jax.nn.elu(out)
+
+
+_LAYERS = {"sage": sage_layer, "gcn": gcn_layer, "gat": gat_layer}
+
+
+def forward(spec: GNNSpec, params: Params, x, blk, sync) -> jnp.ndarray:
+    """Full model forward on one partition's block. Returns logits
+    [Vloc+1, num_classes] (valid at every replica; loss is master-gated)."""
+    layer_fn = _LAYERS[spec.model]
+    h = x
+    n_layers = len(params["layers"])
+    for li, p in enumerate(params["layers"]):
+        h = layer_fn(p, h, blk, sync, final=(li == n_layers - 1))
+        # dummy row must stay zero: it is a scatter sink for padding
+        h = h.at[-1].set(0.0)
+    return h
+
+
+def loss_fn(spec: GNNSpec, params: Params, x, blk, sync) -> jnp.ndarray:
+    """Masked softmax cross-entropy, averaged over global training vertices.
+
+    Loss is counted only at master replicas (each training vertex counted
+    exactly once across the cluster).
+    """
+    logits = forward(spec, params, x, blk, sync)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    labels = jnp.maximum(blk.labels, 0)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    weight = (blk.train_mask & blk.master & (blk.labels >= 0)).astype(jnp.float32)
+    local_sum = -(picked * weight).sum()
+    local_cnt = weight.sum()
+    total = sync.psum(jnp.stack([local_sum, local_cnt]))
+    return total[0] / jnp.maximum(total[1], 1.0)

@@ -1,0 +1,199 @@
+"""Replica-synchronisation strategies for edge-partitioned full-batch GNNs.
+
+Three interchangeable implementations of the same contract (complete the
+partial aggregates that per-partition scatter-sums produce):
+
+  LocalSync  — no-op; correct only for k=1. The single-machine oracle.
+  DenseSync  — scatter into a global [V, d] buffer and `psum` it. Volume is
+               O(V·d) per sync, *independent of partitioning quality*. This
+               is the naive baseline the halo exchange is measured against.
+  HaloSync   — static-routed all_to_all using the partition book's replica
+               lists. Volume per sync = 2·k·B·d (B = max pair bucket), which
+               tracks the replication factor — the paper's key mechanism,
+               expressed in XLA-compilable form (DESIGN.md §2).
+
+All three work identically under `jax.vmap(axis_name=...)` (CPU simulation of
+k workers) and `jax.shard_map` (real meshes / the multi-pod dry-run), because
+they only use axis-name collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition_book import EdgePartitionBook
+
+
+class Block(NamedTuple):
+    """One partition's static device block (all jnp arrays, pytree-able).
+
+    Leading [k, ...] when stacked for vmap/shard_map; per-device inside.
+    """
+
+    x: jnp.ndarray           # [Vloc+1, F] features
+    labels: jnp.ndarray      # [Vloc+1] int32 (-1 pad)
+    train_mask: jnp.ndarray  # [Vloc+1] bool
+    esrc: jnp.ndarray        # [Eloc] int32
+    edst: jnp.ndarray        # [Eloc] int32
+    emask: jnp.ndarray       # [Eloc] bool
+    degree: jnp.ndarray      # [Vloc+1] float32 (global symmetric degree)
+    master: jnp.ndarray      # [Vloc+1] bool
+    vmask: jnp.ndarray       # [Vloc+1] bool
+    send_idx: jnp.ndarray    # [k, B] int32
+    send_mask: jnp.ndarray   # [k, B] bool
+    recv_idx: jnp.ndarray    # [k, B] int32
+    recv_mask: jnp.ndarray   # [k, B] bool
+    vglobal: jnp.ndarray     # [Vloc+1] int32 (pad -> V, the global dummy row)
+
+
+def build_blocks(
+    book: EdgePartitionBook,
+    features: np.ndarray,
+    labels: np.ndarray,
+    train_mask: np.ndarray,
+) -> Block:
+    """Stacked [k, ...] Block from a partition book + global node data."""
+    x = book.local_features(features.astype(np.float32))
+    # one dummy row is already included (index v_max)
+    lab = book.local_labels(labels.astype(np.int32))
+    tm = np.zeros((book.k, book.v_max + 1), dtype=bool)
+    safe = np.where(book.vglobal >= 0, book.vglobal, 0)
+    tm[:] = train_mask[safe]
+    tm &= book.vmask
+    vg = np.where(book.vglobal >= 0, book.vglobal, book.num_vertices)
+    return Block(
+        x=jnp.asarray(x),
+        labels=jnp.asarray(lab),
+        train_mask=jnp.asarray(tm),
+        esrc=jnp.asarray(book.esrc),
+        edst=jnp.asarray(book.edst),
+        emask=jnp.asarray(book.emask),
+        degree=jnp.asarray(book.degree),
+        master=jnp.asarray(book.master),
+        vmask=jnp.asarray(book.vmask),
+        send_idx=jnp.asarray(book.send_idx),
+        send_mask=jnp.asarray(book.send_mask),
+        recv_idx=jnp.asarray(book.recv_idx),
+        recv_mask=jnp.asarray(book.recv_mask),
+        vglobal=jnp.asarray(vg.astype(np.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSync:
+    """k=1: partial aggregates are already complete."""
+
+    def reduce_sum(self, h):
+        return h
+
+    def reduce_max(self, h):
+        return h
+
+    def broadcast(self, h):
+        return h
+
+    def psum(self, v):
+        return v
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSync:
+    """Naive baseline: materialise the global vertex state and psum it."""
+
+    blk: Block
+    num_vertices: int
+    axis: str
+
+    def _to_global(self, h):
+        g = jnp.zeros((self.num_vertices + 1, h.shape[-1]), h.dtype)
+        g = g.at[self.blk.vglobal].add(h * self.blk.vmask[:, None])
+        return g
+
+    def reduce_sum(self, h):
+        g = jax.lax.psum(self._to_global(h), self.axis)
+        return g[self.blk.vglobal] * self.blk.vmask[:, None]
+
+    def reduce_max(self, h):
+        g = jnp.full((self.num_vertices + 1, h.shape[-1]), -1e30, h.dtype)
+        g = g.at[self.blk.vglobal].max(jnp.where(self.blk.vmask[:, None], h, -1e30))
+        g = jax.lax.pmax(g, self.axis)
+        return jnp.where(self.blk.vmask[:, None], g[self.blk.vglobal], h)
+
+    def broadcast(self, h):
+        # reduce already produced globally-complete values on every replica
+        return h
+
+    def psum(self, v):
+        return jax.lax.psum(v, self.axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSync:
+    """Static-routed replica synchronisation (the paper-faithful path).
+
+    reduce_*: every mirror packs its partial rows for each master partition
+    into fixed buckets; one all_to_all later, masters scatter-accumulate.
+    broadcast: the exact reverse routing pushes completed rows back.
+    """
+
+    blk: Block
+    axis: str
+
+    def _exchange(self, buf):
+        # buf [k, B, d]; result[j] = what device j sent to me
+        return jax.lax.all_to_all(buf, self.axis, split_axis=0, concat_axis=0)
+
+    def reduce_sum(self, h):
+        blk = self.blk
+        send = h[blk.send_idx] * blk.send_mask[..., None]
+        recv = self._exchange(send)
+        # pads point at the dummy row and carry zeros -> harmless adds
+        return h.at[blk.recv_idx].add(recv)
+
+    def reduce_max(self, h):
+        blk = self.blk
+        send = jnp.where(blk.send_mask[..., None], h[blk.send_idx], -1e30)
+        recv = self._exchange(send)
+        return h.at[blk.recv_idx].max(jnp.where(blk.recv_mask[..., None], recv, -1e30))
+
+    def broadcast(self, h):
+        blk = self.blk
+        send = h[blk.recv_idx] * blk.recv_mask[..., None]
+        recv = self._exchange(send)
+        current = h[blk.send_idx]
+        updated = jnp.where(blk.send_mask[..., None], recv, current)
+        return h.at[blk.send_idx].set(updated)
+
+    def psum(self, v):
+        return jax.lax.psum(v, self.axis)
+
+
+def make_sync(mode: str, blk: Block, num_vertices: int, axis: str):
+    if mode == "local":
+        return LocalSync()
+    if mode == "dense":
+        return DenseSync(blk=blk, num_vertices=num_vertices, axis=axis)
+    if mode == "halo":
+        return HaloSync(blk=blk, axis=axis)
+    raise ValueError(f"unknown sync mode {mode!r}")
+
+
+def sync_bytes_per_round(book: EdgePartitionBook, d: int, mode: str) -> int:
+    """Analytic collective volume of ONE reduce+broadcast pair, all devices.
+
+    Used by the study harness and checked against the dry-run HLO.
+    """
+    if mode == "halo":
+        return 2 * book.k * book.k * book.bucket * d * 4
+    if mode == "dense":
+        # psum of [V+1, d] on k devices (ring all-reduce ~ 2x payload)
+        return 2 * book.k * (book.num_vertices + 1) * d * 4
+    return 0

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: single-token decode attention over a long KV cache.
+
+Decode attention is purely memory-bound (stream S x D keys/values per new
+token); the kernel's job is to saturate HBM: grid over kv blocks, online
+softmax in VMEM scratch, masked by the cache's valid length (scalar
+prefetch). Head-batched: q [BH, D] vs cache [BH, S, D].
+
+Blocks of 1024 cache rows x D lanes stream through VMEM; one [8-padded, D]
+accumulator per head. Contract matches ref.decode_attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 1024
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, block_k, n_kv):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # [1, d] (q row padded to sublane)
+    k = k_ref[0]                       # [block_k, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                          # [1, block_k]
+    idx = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    s = jnp.where(idx < valid_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention(
+    q: jnp.ndarray,        # [BH, D]
+    k: jnp.ndarray,        # [BH, S, D]
+    v: jnp.ndarray,        # [BH, S, D]
+    valid_len: jnp.ndarray,  # scalar int32
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, d = k.shape
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    n_kv = s // block_k
+    scale = 1.0 / float(np.sqrt(d))
+    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, n_kv=n_kv
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, ki, valid: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ki, valid: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ki, valid: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, ki, valid: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=interpret,
+    )(valid, q[:, None, :], k, v)
+    return out[:, 0, :]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Grid: (batch*heads, q_blocks, kv_blocks) with kv innermost. Running max /
+normaliser / accumulator live in VMEM scratch across kv steps; the output
+tile is written once at the last kv step. Causal masking is an iota compare
+inside the kernel — no S x S mask tensor ever exists.
+
+Blocks default to (128, 512): q tile rows are a multiple of 8 sublanes, the
+head dim and kv tile a multiple of 128 lanes — MXU-aligned per TPU v5e.
+VMEM per step ~ Bq*D + 2*Bk*D + Bq*Bk floats, well under the 128 MiB VMEM.
+
+Contract matches ref.flash_attention_ref; tests sweep shapes/dtypes in
+interpret mode. The pure-jnp blockwise path (models.layers.attention) is the
+XLA fallback on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale, block_q, block_k, n_kv, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # [block_q, d]
+    k = k_ref[0]  # [block_k, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [block_q, block_k]
+
+    if causal:
+        q_idx = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        k_idx = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [BH, Sq, D]
+    k: jnp.ndarray,  # [BH, Skv, D]
+    v: jnp.ndarray,  # [BH, Skv, D]
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    n_q = sq // block_q
+    n_kv = skv // block_k
+    scale = 1.0 / float(np.sqrt(d))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv=n_kv, causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running normaliser
+            pltpu.VMEM((block_q, d), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,147 @@
+"""jit'd public wrappers for the Pallas kernels, with platform dispatch.
+
+On TPU the Pallas kernels run natively; elsewhere (this CPU container) the
+wrappers dispatch to the pure-jnp oracle so the rest of the system never
+cares. `interpret=True` forces the kernel body through the Pallas
+interpreter (tests validate kernels this way, per-shape/dtype, against the
+oracles in ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.segment_spmm import (
+    DEFAULT_BLOCK_E,
+    DEFAULT_TILE_V,
+    segment_spmm as _spmm_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# segment spmm (GNN aggregation)
+# ---------------------------------------------------------------------------
+
+
+def prepare_tiled_edges(
+    dst: np.ndarray,
+    num_rows: int,
+    *,
+    tile_v: int = DEFAULT_TILE_V,
+    block_e: int = DEFAULT_BLOCK_E,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Host-side layout pass (once per graph/partition): sort edges by row
+    tile and pad each tile's edge list to a multiple of block_e.
+
+    Returns (edge_order, local_dst, rows_padded):
+      edge_order [E_padded] — gather indices into the original edge list
+                              (padding -> E, caller appends a zero message row)
+      local_dst  [E_padded] — row id within the edge's tile (padding -> tile_v)
+    """
+    e = dst.shape[0]
+    rows_padded = int(np.ceil(max(num_rows, 1) / tile_v) * tile_v)
+    n_tiles = rows_padded // tile_v
+    tile_of = dst // tile_v
+    order = np.argsort(tile_of, kind="stable")
+    counts = np.bincount(tile_of, minlength=n_tiles)
+    padded_counts = np.maximum(np.ceil(counts / block_e).astype(int), 1) * block_e
+    total = int(padded_counts.sum())
+    # make every tile have the same number of edge blocks (grid uniformity)
+    per_tile = int(padded_counts.max())
+    total = per_tile * n_tiles
+    edge_order = np.full(total, e, dtype=np.int64)
+    local_dst = np.full(total, tile_v, dtype=np.int32)
+    starts = np.cumsum(counts) - counts
+    for t in range(n_tiles):
+        seg = order[starts[t]: starts[t] + counts[t]]
+        edge_order[t * per_tile: t * per_tile + counts[t]] = seg
+        local_dst[t * per_tile: t * per_tile + counts[t]] = (
+            dst[seg] - t * tile_v
+        ).astype(np.int32)
+    return edge_order, local_dst, rows_padded
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "use_pallas", "interpret"))
+def segment_spmm(
+    messages: jnp.ndarray,
+    local_dst: jnp.ndarray,
+    num_rows: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled segment-sum. `messages`/`local_dst` must come from
+    `prepare_tiled_edges` layout; non-TPU backends use the oracle."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use or interpret:
+        return _spmm_pallas(
+            messages, local_dst, num_rows, interpret=interpret or not _on_tpu()
+        )
+    # oracle path: local_dst is tile-relative; rebuild global ids
+    e = messages.shape[0]
+    n_tiles = max(num_rows // DEFAULT_TILE_V, 1)
+    per_tile = e // n_tiles
+    tile_idx = jnp.arange(e) // per_tile
+    gdst = jnp.where(
+        local_dst >= DEFAULT_TILE_V, num_rows, tile_idx * DEFAULT_TILE_V + local_dst
+    )
+    return ref.segment_sum_ref(messages, gdst.astype(jnp.int32), num_rows)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    b, h, sq, d = q.shape
+    if use or interpret:
+        fold = lambda x: x.reshape(b * h, x.shape[2], d)
+        out = _flash_pallas(
+            fold(q), fold(k), fold(v), causal=causal,
+            interpret=interpret or not _on_tpu(),
+        )
+        return out.reshape(b, h, sq, d)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, D]
+    k: jnp.ndarray,  # [B, H, S, D]
+    v: jnp.ndarray,
+    valid_len: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    b, h, s, d = k.shape
+    if use or interpret:
+        out = _decode_pallas(
+            q.reshape(b * h, d), k.reshape(b * h, s, d), v.reshape(b * h, s, d),
+            valid_len, interpret=interpret or not _on_tpu(),
+        )
+        return out.reshape(b, h, d)
+    return ref.decode_attention_ref(q, k, v, valid_len)

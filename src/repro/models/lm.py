@@ -1,0 +1,888 @@
+"""Config-driven LM assembly: init / train forward / prefill / decode.
+
+One code path covers all ten assigned architectures:
+
+  dense        pre-norm blocks: GQA attention (+bias/qk_norm/SWA) + SwiGLU
+  moe          attention + capacity-bucketed top-k MoE (+ shared experts,
+               + deepseek's dense layer 0)
+  ssm          mamba2 blocks (SSD chunked scan / streaming decode)
+  hybrid       hymba: parallel attention + mamba heads in one block;
+               SWA layers scanned, 3 global-attention layers interleaved
+  vlm          qwen2-vl: M-RoPE, stub patch embeddings prefix
+  audio        whisper: encoder stack (stub frame embeddings) + decoder with
+               cross-attention; LayerNorm/GELU, learned positions
+
+Parameters are *stacked over layers* ([L, ...] leading dim) and the forward
+runs `lax.scan` over layers — compile time stays flat in depth, which is what
+makes the 512-device dry-run tractable, and is also how production JAX LM
+frameworks (MaxText et al.) are built. Caches are likewise stacked.
+
+`init_params` is pure (jax.random) so the dry-run can take
+`jax.eval_shape(init_params, ...)` and never allocate the real model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Any
+
+# Optional NamedShardings for the residual stream [B, S, d], set by the
+# distributed step builders (repro.dist.steps). Without this pin, GSPMD can
+# resolve the FSDP-weights-vs-batch-activations conflict by replicating the
+# batch — measured 177 GiB/device on yi-6b train_4k before the constraint.
+# `sp` additionally shards the sequence dim over 'model' (Megatron-style
+# sequence parallelism) so the remat-saved layer inputs divide by the TP
+# degree; `dp` is the batch-only fallback for non-divisible sequence lengths.
+# Plain Python globals: set before tracing, captured at trace.
+_ACT_SHARDING_SP: Optional[Any] = None
+_ACT_SHARDING_DP: Optional[Any] = None
+_ACT_SP_DIVISOR: int = 1
+
+
+# MoE dispatch locality: when set, the MoE FFN runs inside a shard_map that
+# is *manual* over the data-parallel axes (each DP shard dispatches its own
+# tokens — the production EP pattern) and *auto* over 'model' (experts).
+# Without this, the global flatten + argsort in the dispatch forces GSPMD to
+# replicate token buffers (measured 209 GiB/device on phi3.5-moe train_4k).
+_MOE_MESH: Optional[Any] = None
+_MOE_DP_AXES: tuple = ()
+
+# Selective-remat policy name: None = full recompute (save block inputs
+# only); "ssm_proj" = additionally save the tagged SSM in_proj outputs so the
+# backward recompute skips the dominant SSM matmul (+~35 MB/layer on
+# mamba2-370m train_4k, -25% recompute flops).
+_REMAT_POLICY: Optional[str] = None
+
+
+def set_remat_policy(name: Optional[str]) -> None:
+    global _REMAT_POLICY
+    _REMAT_POLICY = name
+
+
+# MoE dispatch payload dtype (None = model dtype). Set to
+# jnp.float8_e4m3fn to quantise the expert all_to_all (§Perf experiments).
+_MOE_DISPATCH_DTYPE: Optional[Any] = None
+
+
+def set_moe_dispatch_dtype(dtype) -> None:
+    global _MOE_DISPATCH_DTYPE
+    _MOE_DISPATCH_DTYPE = dtype
+
+
+def set_activation_sharding(dp, sp=None, sp_divisor: int = 1,
+                            moe_mesh=None, moe_dp_axes: tuple = ()) -> None:
+    global _ACT_SHARDING_SP, _ACT_SHARDING_DP, _ACT_SP_DIVISOR
+    global _MOE_MESH, _MOE_DP_AXES
+    _ACT_SHARDING_DP = dp
+    _ACT_SHARDING_SP = sp
+    _ACT_SP_DIVISOR = max(sp_divisor, 1)
+    _MOE_MESH = moe_mesh
+    _MOE_DP_AXES = tuple(moe_dp_axes)
+
+
+def _pin(x):
+    if x.ndim != 3:
+        return x
+    if _ACT_SHARDING_SP is not None and x.shape[1] % _ACT_SP_DIVISOR == 0 \
+            and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, _ACT_SHARDING_SP)
+    if _ACT_SHARDING_DP is not None:
+        return jax.lax.with_sharding_constraint(x, _ACT_SHARDING_DP)
+    return x
+
+
+def _pin_batched(t):
+    """Pin dim 0 of an arbitrary-rank tensor to the batch axes (MoE bufs)."""
+    if _ACT_SHARDING_DP is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec0 = _ACT_SHARDING_DP.spec[0]
+    ns = NamedSharding(_ACT_SHARDING_DP.mesh, P(spec0, *([None] * (t.ndim - 1))))
+    return jax.lax.with_sharding_constraint(t, ns)
+
+
+def _pin_dim(t, dim: int, require_divisible: bool = True):
+    """Pin dim 0 to batch and `dim` to 'model' (TP interior layouts:
+    attention heads [B,H,S,D] dim 1, MLP hidden [B,S,F] dim 2). Falls back
+    to batch-only when the dim doesn't divide the TP degree (hymba's 25
+    heads, whisper's 6)."""
+    if _ACT_SHARDING_DP is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _ACT_SHARDING_DP.mesh
+    spec0 = _ACT_SHARDING_DP.spec[0]
+    msize = _ACT_SP_DIVISOR
+    if msize > 1 and (not require_divisible or t.shape[dim] % msize == 0):
+        spec = [None] * t.ndim
+        spec[0] = spec0
+        spec[dim] = "model"
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, P(*spec)))
+    # non-divisible: leave the layout to GSPMD (forcing batch-only pins or
+    # DP residuals both measured worse on hymba/whisper); memory pressure on
+    # these archs is handled by gradient accumulation instead
+    return t
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def _attn_block_params(key, cfg: ArchConfig, n_layers: int, dt):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense_init(ks[0], (n_layers, d, hq * hd), dt),
+        "wk": _dense_init(ks[1], (n_layers, d, hkv * hd), dt),
+        "wv": _dense_init(ks[2], (n_layers, d, hkv * hd), dt),
+        "wo": _dense_init(ks[3], (n_layers, hq * hd, d), dt),
+        "ln1": jnp.ones((n_layers, d), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, hq * hd), dt)
+        p["bk"] = jnp.zeros((n_layers, hkv * hd), dt)
+        p["bv"] = jnp.zeros((n_layers, hkv * hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n_layers, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((n_layers, hd), jnp.float32)
+    if cfg.norm == "layernorm":
+        p["ln1_b"] = jnp.zeros((n_layers, d), jnp.float32)
+    return p
+
+
+def _mlp_block_params(key, cfg: ArchConfig, n_layers: int, dt):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    if cfg.moe:
+        E, fe = cfg.num_experts, cfg.d_ff
+        p = {
+            "router": _dense_init(ks[0], (n_layers, d, E), jnp.float32),
+            "w1": _dense_init(ks[1], (n_layers, E, d, fe), dt),
+            "w3": _dense_init(ks[2], (n_layers, E, d, fe), dt),
+            "w2": _dense_init(ks[3], (n_layers, E, fe, d), dt),
+            "ln2": jnp.ones((n_layers, d), jnp.float32),
+        }
+        if cfg.num_shared_experts:
+            fs = cfg.num_shared_experts * cfg.d_ff
+            p["shared_w1"] = _dense_init(ks[4], (n_layers, d, fs), dt)
+            p["shared_w3"] = _dense_init(ks[5], (n_layers, d, fs), dt)
+            p["shared_w2"] = _dense_init(ks[6], (n_layers, fs, d), dt)
+        return p
+    if cfg.mlp == "gelu":
+        return {
+            "w1": _dense_init(ks[0], (n_layers, d, f), dt),
+            "b1": jnp.zeros((n_layers, f), dt),
+            "w2": _dense_init(ks[1], (n_layers, f, d), dt),
+            "b2": jnp.zeros((n_layers, d), dt),
+            "ln2": jnp.ones((n_layers, d), jnp.float32),
+            "ln2_b": jnp.zeros((n_layers, d), jnp.float32),
+        }
+    return {
+        "w1": _dense_init(ks[0], (n_layers, d, f), dt),
+        "w3": _dense_init(ks[1], (n_layers, d, f), dt),
+        "w2": _dense_init(ks[2], (n_layers, f, d), dt),
+        "ln2": jnp.ones((n_layers, d), jnp.float32),
+    }
+
+
+def _ssm_block_params(key, cfg: ArchConfig, n_layers: int, dt):
+    d = cfg.d_model
+    din = cfg.ssm_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (n_layers, d, 2 * din + 2 * g * n + h), dt),
+        "conv_w": _dense_init(ks[1], (n_layers, cfg.conv_width, conv_dim), dt, scale=0.5),
+        "dt_bias": jnp.zeros((n_layers, h), jnp.float32),
+        "a_log": jnp.zeros((n_layers, h), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((n_layers, h), jnp.float32),
+        "ssm_norm": jnp.ones((n_layers, din), jnp.float32),
+        "out_proj": _dense_init(ks[2], (n_layers, din, d), dt),
+        "ln_ssm": jnp.ones((n_layers, d), jnp.float32),
+    }
+
+
+def _block_group_params(key, cfg: ArchConfig, n_layers: int, *, moe_override=None):
+    """Params for a stack of `n_layers` homogeneous blocks."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p: dict = {}
+    if cfg.num_heads:
+        p.update(_attn_block_params(ks[0], cfg, n_layers, dt))
+    if cfg.ssm:
+        p.update(_ssm_block_params(ks[1], cfg, n_layers, dt))
+    if cfg.d_ff or cfg.moe:
+        c = cfg if moe_override is None else moe_override
+        p.update(_mlp_block_params(ks[2], c, n_layers, dt))
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 10)
+    params: dict = {
+        "embed": _dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.norm == "layernorm":
+        params["final_norm_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+
+    if cfg.encoder_decoder:
+        params["enc_pos"] = _dense_init(ks[2], (cfg.encoder_seq, cfg.d_model), dt, scale=0.02)
+        params["enc_blocks"] = _block_group_params(ks[3], cfg, cfg.encoder_layers)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params["enc_final_norm_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        # decoder cross-attention stack
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        hq, hkv = cfg.num_heads, cfg.num_kv_heads
+        kc = jax.random.split(ks[4], 5)
+        params["cross"] = {
+            "wq": _dense_init(kc[0], (cfg.num_layers, d, hq * hd), dt),
+            "wk": _dense_init(kc[1], (cfg.num_layers, d, hkv * hd), dt),
+            "wv": _dense_init(kc[2], (cfg.num_layers, d, hkv * hd), dt),
+            "wo": _dense_init(kc[3], (cfg.num_layers, hq * hd, d), dt),
+            "ln": jnp.ones((cfg.num_layers, d), jnp.float32),
+            "ln_b": jnp.zeros((cfg.num_layers, d), jnp.float32),
+        }
+        # whisper decoder uses learned positions, no RoPE. Sized to cover the
+        # assigned decode shapes (mechanical; real whisper uses 448).
+        params["dec_pos"] = _dense_init(ks[5], (65536, cfg.d_model), dt, scale=0.02)
+
+    n_main = cfg.num_layers
+    if cfg.hybrid and cfg.num_global_layers:
+        n_main = cfg.num_layers - cfg.num_global_layers
+        params["global_blocks"] = _block_group_params(ks[6], cfg, cfg.num_global_layers)
+    if cfg.first_layer_dense:
+        n_main = cfg.num_layers - 1
+        dense_cfg = dataclasses.replace(
+            cfg, moe=False, d_ff=cfg.dense_d_ff, name=cfg.name + "-dense0"
+        )
+        params["dense0"] = _block_group_params(ks[7], dense_cfg, 1)
+    params["blocks"] = _block_group_params(ks[8], cfg, n_main)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block forwards (one layer, unstacked params)
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, x, scale, bias=None):
+    if cfg.norm == "layernorm":
+        return L.layernorm(x, scale, bias if bias is not None else jnp.zeros_like(scale))
+    return L.rmsnorm(x, scale)
+
+
+def _attn_forward(
+    cfg: ArchConfig, p, x, *, positions, pos3=None, window, cache=None,
+    cache_index=None, cross_kv=None, causal=True,
+):
+    """Attention sub-block. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _pin_dim(q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3), 1)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = L.attention(q, k, v, causal=False)
+        out = _pin_dim(out, 1).transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+        return out @ p["wo"], None
+
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = _pin_dim(k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3), 1)
+    v = _pin_dim(v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3), 1)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    if cfg.mrope and pos3 is not None:
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.encoder_decoder:
+        pass  # whisper: learned positions added at embedding time
+    else:
+        q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+
+    if cache is None:
+        out = _pin_dim(L.attention(q, k, v, causal=causal, window=window), 1)
+        new_cache = None
+    else:
+        ck, cv = cache["k"], cache["v"]
+        cache_len = ck.shape[2]
+        if s == 1:
+            # decode: write slot (ring-buffered when windowed)
+            slot = cache_index % cache_len if window else cache_index
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, slot, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, slot, 0))
+            valid = jnp.minimum(cache_index + 1, cache_len)
+            out = L.attention(q, ck, cv, causal=False, kv_valid_len=valid)
+        else:
+            # prefill: bulk write. Windowed caches keep the tail, laid out in
+            # ring order (token position p -> slot p % W) so decode appends
+            # consistently.
+            if window and cache_len < s:
+                k_w = jnp.roll(k[:, :, -cache_len:], s % cache_len, axis=2)
+                v_w = jnp.roll(v[:, :, -cache_len:], s % cache_len, axis=2)
+            else:
+                k_w, v_w = k, v
+            ck = jax.lax.dynamic_update_slice(ck, k_w, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v_w, (0, 0, 0, 0))
+            out = L.attention(q, k, v, causal=causal, window=window)
+        new_cache = {"k": ck, "v": cv}
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+def _mlp_forward(cfg: ArchConfig, p, x):
+    """Dense or MoE FFN on [B, S, d]. Returns (out, aux_loss).
+
+    MoE dispatch is PER SEQUENCE (Switch-style groups, vmapped over batch):
+    each batch row sorts/buckets only its own S*k assignments, so the token
+    buffers keep the batch dim and shard over data like every other
+    activation. A global flatten+argsort instead forces GSPMD to replicate
+    the dispatch buffers (measured 209 GiB/device on phi3.5-moe train_4k).
+    """
+    if cfg.moe and "router" in p:
+        moe_params = {"router": p["router"], "w1": p["w1"],
+                      "w3": p["w3"], "w2": p["w2"]}
+        b, s, d = x.shape
+        chunk = 1024
+        if s > chunk and s % chunk == 0:
+            # sequence-chunked dispatch with an inner checkpoint: backward
+            # holds one chunk's dispatch buffers instead of the whole
+            # sequence's (the buffers are ~2.5x token bytes in f32).
+            def moe_chunk(xc):
+                return L.moe_ffn(moe_params, xc,
+                                 top_k=cfg.experts_per_token,
+                                 capacity_factor=cfg.moe_capacity_factor,
+                                 pin=_pin_batched,
+                                 dispatch_dtype=_MOE_DISPATCH_DTYPE)
+
+            def body(aux_acc, xc):
+                o, a = jax.checkpoint(moe_chunk)(xc)
+                return aux_acc + a, o
+
+            xr = jnp.moveaxis(x.reshape(b, s // chunk, chunk, d), 1, 0)
+            aux_sum, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xr)
+            out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+            aux = aux_sum / (s // chunk)
+        else:
+            out, aux = L.moe_ffn(moe_params, x, top_k=cfg.experts_per_token,
+                                 capacity_factor=cfg.moe_capacity_factor,
+                                 pin=_pin_batched,
+                                 dispatch_dtype=_MOE_DISPATCH_DTYPE)
+        if "shared_w1" in p:
+            shared = jax.nn.silu(x @ p["shared_w1"]) * (x @ p["shared_w3"])
+            out = out + shared @ p["shared_w2"]
+        return out, aux
+    if cfg.mlp == "gelu":
+        return L.gelu_mlp(p, x), 0.0
+    return L.gated_mlp(p, x, pin=lambda t: _pin_dim(t, 2)), 0.0
+
+
+def _ssm_forward(cfg: ArchConfig, p, x, *, cache=None, cache_index=None):
+    """Mamba2 sub-block on [B, S, d]. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    din = cfg.ssm_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]  # [b, s, 2*din + 2*g*n + h]
+    # remat tag: selective-remat policies can save this (the dominant matmul
+    # of an SSM block) so the backward recompute skips it
+    from jax.ad_checkpoint import checkpoint_name
+    proj = checkpoint_name(proj, "ssm_proj")
+    z, xb, dt_raw = jnp.split(proj, [din, 2 * din + 2 * g * n], axis=-1)
+    A = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [b,s,h]
+
+    if cache is None or s > 1:
+        conv_in = xb
+        if cache is not None:  # prefill with state capture
+            conv_out, conv_state = L.causal_conv1d(
+                conv_in, p["conv_w"],
+                state=jnp.zeros((b, cfg.conv_width - 1, conv_in.shape[-1]), x.dtype),
+            )
+        else:
+            conv_out = L.causal_conv1d(conv_in, p["conv_w"])
+            conv_state = None
+        conv_out = jax.nn.silu(conv_out)
+        xs, B_, C_ = jnp.split(conv_out, [din, din + g * n], axis=-1)
+        xs = xs.reshape(b, s, h, pdim)
+        Bm = B_.reshape(b, s, g, n)
+        Cm = C_.reshape(b, s, g, n)
+        chunk = 128
+        while s % chunk:
+            chunk //= 2
+        y, final_state = L.ssd_chunked(xs, dt, A, Bm, Cm, chunk=chunk)
+        y = (y + xs * p["d_skip"][None, None, :, None]).astype(x.dtype)
+        y = y.reshape(b, s, din)
+        new_cache = (
+            {"conv": conv_state, "ssm": final_state} if cache is not None else None
+        )
+    else:
+        conv_out, conv_state = L.causal_conv1d(xb, p["conv_w"], state=cache["conv"])
+        conv_out = jax.nn.silu(conv_out)
+        xs, B_, C_ = jnp.split(conv_out[:, 0], [din, din + g * n], axis=-1)
+        xs = xs.reshape(b, h, pdim)
+        Bm = B_.reshape(b, g, n)
+        Cm = C_.reshape(b, g, n)
+        y, new_state = L.ssd_decode_step(xs, dt[:, 0], A, Bm, Cm, cache["ssm"])
+        y = (y + xs * p["d_skip"][None, :, None]).astype(x.dtype)
+        y = y.reshape(b, 1, din)
+        new_cache = {"conv": conv_state, "ssm": new_state}
+
+    y = L.rmsnorm(y, p["ssm_norm"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], new_cache
+
+
+def block_forward(
+    cfg: ArchConfig, p, x, *, positions, pos3=None, window, cache=None,
+    cache_index=None, cross_kv=None,
+):
+    """One decoder block. Returns (x, new_cache, aux_loss)."""
+    aux = 0.0
+    new_cache: dict = {}
+    if cfg.hybrid:
+        # hymba: attention and mamba heads in parallel on the same normed input
+        h = _norm(cfg, x, p["ln1"])
+        attn_out, c_attn = _attn_forward(
+            cfg, p, h, positions=positions, pos3=pos3, window=window,
+            cache=None if cache is None else cache.get("attn"),
+            cache_index=cache_index,
+        )
+        ssm_out, c_ssm = _ssm_forward(
+            cfg, p, h, cache=None if cache is None else cache.get("ssm_c"),
+            cache_index=cache_index,
+        )
+        x = x + 0.5 * (attn_out + ssm_out)
+        if cache is not None:
+            new_cache = {"attn": c_attn, "ssm_c": c_ssm}
+    elif cfg.ssm:
+        h = _norm(cfg, x, p["ln_ssm"])
+        out, c_ssm = _ssm_forward(
+            cfg, p, h, cache=None if cache is None else cache.get("ssm_c"),
+            cache_index=cache_index,
+        )
+        x = x + out
+        if cache is not None:
+            new_cache = {"ssm_c": c_ssm}
+    else:
+        h = _norm(cfg, x, p["ln1"], p.get("ln1_b"))
+        out, c_attn = _attn_forward(
+            cfg, p, h, positions=positions, pos3=pos3, window=window,
+            cache=None if cache is None else cache.get("attn"),
+            cache_index=cache_index,
+        )
+        x = x + out
+        if cache is not None:
+            new_cache = {"attn": c_attn}
+
+    if cross_kv is not None:
+        pc = p["cross"]
+        h = L.layernorm(x, pc["ln"], pc["ln_b"])
+        out, _ = _attn_forward(
+            cfg, {"wq": pc["wq"], "wk": pc["wk"], "wv": pc["wv"], "wo": pc["wo"]},
+            h, positions=positions, window=0, cross_kv=cross_kv,
+        )
+        x = x + out
+
+    if cfg.d_ff or cfg.moe:
+        h = _norm(cfg, x, p["ln2"], p.get("ln2_b"))
+        out, aux = _mlp_forward(cfg, p, h)
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers orchestration
+# ---------------------------------------------------------------------------
+
+
+def _slice_tree(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _layer_of(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _scan_group(
+    cfg: ArchConfig,
+    stacked: Params,
+    x,
+    *,
+    positions,
+    pos3=None,
+    window: int,
+    caches=None,
+    cache_index=None,
+    enc_out=None,
+    remat: bool = False,
+):
+    """lax.scan over a homogeneous stack of blocks.
+
+    `caches` is a stacked pytree ([L, ...] leading) or None. Cross-attention
+    (whisper): `enc_out` given -> K/V computed per layer inside the scan;
+    decode instead finds precomputed {"cross_k","cross_v"} inside the cache.
+    Returns (x, new_caches, aux_sum).
+    """
+
+    def body(carry, scans):
+        h = carry
+        p, c = scans
+        cross_kv = None
+        if enc_out is not None:
+            pc = p["cross"]
+            b, se, d = enc_out.shape
+            hd = cfg.resolved_head_dim
+            ck = (enc_out @ pc["wk"]).reshape(b, se, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+            cv = (enc_out @ pc["wv"]).reshape(b, se, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+            cross_kv = (ck, cv)
+        elif c is not None and "cross_k" in c:
+            cross_kv = (c["cross_k"], c["cross_v"])
+
+        block_cache = None
+        if c is not None:
+            block_cache = {k: v for k, v in c.items() if not k.startswith("cross_")}
+            if not block_cache:
+                block_cache = None
+
+        def fwd(p_, h_, cache_, cross_kv_):
+            h_ = _pin(h_)
+            out, c_, a_ = block_forward(
+                cfg, p_, h_, positions=positions, pos3=pos3, window=window,
+                cache=cache_, cache_index=cache_index, cross_kv=cross_kv_,
+            )
+            return _pin(out), c_, a_
+
+        if remat:
+            if _REMAT_POLICY:
+                fwd = jax.checkpoint(
+                    fwd,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        _REMAT_POLICY),
+                )
+            else:
+                fwd = jax.checkpoint(fwd)
+        h, new_c, aux = fwd(p, h, block_cache, cross_kv)
+        out_c = new_c if new_c else None
+        if c is not None and cross_kv is not None and "cross_k" in (c or {}):
+            out_c = dict(out_c or {})
+            out_c["cross_k"] = c["cross_k"]
+            out_c["cross_v"] = c["cross_v"]
+        if enc_out is not None and caches is not None:
+            # prefill of enc-dec: persist cross K/V into the cache
+            out_c = dict(out_c or {})
+            out_c["cross_k"] = cross_kv[0]
+            out_c["cross_v"] = cross_kv[1]
+        return h, (out_c, aux)
+
+    if caches is None:
+        x, (_, auxs) = jax.lax.scan(body, x, (stacked, None))
+        return x, None, jnp.sum(auxs)
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches, jnp.sum(auxs)
+
+
+def _run_decoder_stack(
+    cfg: ArchConfig, params, x, *, positions, pos3=None,
+    caches=None, cache_index=None, enc_out=None, remat=False,
+):
+    """Dispatch over the arch's block-group layout. Returns (x, caches, aux)."""
+    aux_total = 0.0
+    new_caches: dict = {}
+
+    if cfg.first_layer_dense:
+        d0_cache = None if caches is None else caches.get("dense0")
+        x, c0, aux = _scan_group(
+            cfg, params["dense0"], x, positions=positions, pos3=pos3,
+            window=cfg.sliding_window, caches=d0_cache,
+            cache_index=cache_index, remat=remat,
+        )
+        aux_total += aux
+        if caches is not None:
+            new_caches["dense0"] = c0
+
+    if cfg.hybrid and cfg.num_global_layers:
+        ng = cfg.num_global_layers
+        n_main = cfg.num_layers - ng
+        h1 = n_main // 2
+        seg_sizes = [h1, n_main - h1]
+        g_params = params["global_blocks"]
+        m_params = params["blocks"]
+        g_caches = None if caches is None else caches.get("global_blocks")
+        m_caches = None if caches is None else caches.get("blocks")
+        new_g, new_m = [], []
+        mlo = 0
+        for gi in range(ng):
+            x, cg, aux = _scan_group(
+                cfg, _slice_tree(g_params, gi, gi + 1), x,
+                positions=positions, pos3=pos3, window=0,  # global attention
+                caches=None if g_caches is None else _slice_tree(g_caches, gi, gi + 1),
+                cache_index=cache_index, remat=remat,
+            )
+            aux_total += aux
+            new_g.append(cg)
+            if gi < len(seg_sizes):
+                seg = seg_sizes[gi]
+                x, cm, aux = _scan_group(
+                    cfg, _slice_tree(m_params, mlo, mlo + seg), x,
+                    positions=positions, pos3=pos3, window=cfg.sliding_window,
+                    caches=None if m_caches is None else _slice_tree(m_caches, mlo, mlo + seg),
+                    cache_index=cache_index, remat=remat,
+                )
+                aux_total += aux
+                new_m.append(cm)
+                mlo += seg
+        if caches is not None:
+            new_caches["global_blocks"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_g
+            )
+            new_caches["blocks"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_m
+            )
+    else:
+        b_caches = None if caches is None else caches.get("blocks")
+        stacked = params["blocks"]
+        if cfg.encoder_decoder:
+            # cross-attention params ride along in the layer scan
+            stacked = {**stacked, "cross": params["cross"]}
+        x, cb, aux = _scan_group(
+            cfg, stacked, x, positions=positions, pos3=pos3,
+            window=cfg.sliding_window, caches=b_caches,
+            cache_index=cache_index, enc_out=enc_out, remat=remat,
+        )
+        aux_total += aux
+        if caches is not None:
+            new_caches["blocks"] = cb
+
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def _encode(cfg: ArchConfig, params, frames):
+    """Whisper encoder on stub frame embeddings [B, S_enc, d]."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1]), frames.shape[:2]
+    )
+
+    def body(h, p):
+        hn = L.layernorm(h, p["ln1"], p.get("ln1_b", jnp.zeros_like(p["ln1"])))
+        out, _ = _attn_forward(
+            cfg, p, hn, positions=positions, window=0, causal=False
+        )
+        h = h + out
+        hn = L.layernorm(h, p["ln2"], p["ln2_b"])
+        h = h + L.gelu_mlp(p, hn)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.layernorm(x, params["enc_final_norm"], params["enc_final_norm_b"])
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch):
+    """Token (+stub modality) embedding. Returns (x, positions, pos3)."""
+    tokens = batch["tokens"]
+    b, s_tok = tokens.shape
+    x = params["embed"][tokens]
+    pos3 = batch.get("pos3")
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    if cfg.encoder_decoder:
+        start = batch.get("pos_offset", 0)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], start, s_tok, 0)[None]
+    positions = batch.get(
+        "positions",
+        jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1])),
+    )
+    return x, positions, pos3
+
+
+def _logits(cfg: ArchConfig, params, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["unembed"]
+
+
+@jax.custom_vjp
+def _softmax_xent(logits, targets):
+    """Memory-efficient CE: forward keeps only (bf16 logits, f32 lse) as
+    residuals; backward reconstructs softmax on the fly. Avoids the naive
+    log_softmax path that materialises several f32 [B,S,V] copies (measured:
+    ~10 GB/device on the 0.5B train_4k cell before this)."""
+    nll, _ = _softmax_xent_fwd(logits, targets)
+    return nll
+
+
+def _softmax_xent_fwd(logits, targets):
+    l32 = logits.astype(jnp.float32)
+    mx = jax.lax.stop_gradient(l32.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(l32 - mx), axis=-1)) + mx[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(iota == targets[..., None], l32, 0.0), axis=-1
+    )
+    return lse - picked, (logits, targets, lse)
+
+
+def _softmax_xent_bwd(res, g):
+    logits, targets, lse = res
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None])
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (iota == targets[..., None]).astype(jnp.float32)
+    dlogits = (p - onehot) * g[..., None]
+    return dlogits.astype(logits.dtype), None
+
+
+_softmax_xent.defvjp(_softmax_xent_fwd, _softmax_xent_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    """Next-token CE (+ MoE aux). batch: tokens [B,S] (+pos3/patch_embeds/
+    frames). For VLM the patch prefix is excluded from the loss."""
+    x, positions, pos3 = _embed_inputs(cfg, params, batch)
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, _, aux = _run_decoder_stack(
+        cfg, params, x, positions=positions, pos3=pos3,
+        enc_out=enc_out, remat=remat,
+    )
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    tokens = batch["tokens"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        p_len = batch["patch_embeds"].shape[1]
+        x = x[:, p_len:]
+    logits = _logits(cfg, params, x[:, :-1])
+    targets = tokens[:, 1:]
+    nll = _softmax_xent(logits, targets)
+    loss = nll.mean()
+    return loss + 0.01 * aux
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None):
+    """Stacked decode caches sized for `max_len` (ring-buffered for SWA)."""
+    dt = dtype or _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+
+    def attn_cache(n_layers, window):
+        clen = min(window, max_len) if window else max_len
+        return {
+            "k": jnp.zeros((n_layers, batch_size, hkv, clen, hd), dt),
+            "v": jnp.zeros((n_layers, batch_size, hkv, clen, hd), dt),
+        }
+
+    def ssm_cache(n_layers):
+        din = cfg.ssm_inner
+        conv_dim = din + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((n_layers, batch_size, cfg.conv_width - 1, conv_dim), dt),
+            "ssm": jnp.zeros(
+                (n_layers, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dt
+            ),
+        }
+
+    caches: dict = {}
+    n_main = cfg.num_layers
+    if cfg.first_layer_dense:
+        n_main -= 1
+        caches["dense0"] = {"attn": attn_cache(1, cfg.sliding_window)}
+    if cfg.hybrid and cfg.num_global_layers:
+        ng = cfg.num_global_layers
+        n_main -= ng
+        caches["global_blocks"] = {
+            "attn": attn_cache(ng, 0),
+            "ssm_c": ssm_cache(ng),
+        }
+        caches["blocks"] = {
+            "attn": attn_cache(n_main, cfg.sliding_window),
+            "ssm_c": ssm_cache(n_main),
+        }
+        return caches
+    if cfg.ssm and not cfg.hybrid:
+        caches["blocks"] = {"ssm_c": ssm_cache(n_main)}
+        return caches
+    blocks: dict = {"attn": attn_cache(n_main, cfg.sliding_window)}
+    if cfg.encoder_decoder:
+        blocks["cross_k"] = jnp.zeros(
+            (n_main, batch_size, hkv, cfg.encoder_seq, hd), dt
+        )
+        blocks["cross_v"] = jnp.zeros_like(blocks["cross_k"])
+    caches["blocks"] = blocks
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: Optional[int] = None):
+    """Forward over a prompt, producing (last-token logits, filled caches)."""
+    x, positions, pos3 = _embed_inputs(cfg, params, batch)
+    b, s = x.shape[0], x.shape[1]
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"])
+    caches = init_cache(cfg, b, max_len or s)
+    x, caches, _ = _run_decoder_stack(
+        cfg, params, x, positions=positions, pos3=pos3,
+        caches=caches, cache_index=jnp.asarray(0, jnp.int32),
+        enc_out=enc_out, remat=False,
+    )
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches, cache_index, *, pos3=None):
+    """One greedy-decode step. tokens [B, 1]; cache_index: scalar int32 —
+    number of tokens already in the cache. Returns (logits [B,V], caches)."""
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), cache_index, jnp.int32)
+    batch = {"tokens": tokens, "positions": positions, "pos_offset": cache_index}
+    if pos3 is not None:
+        batch["pos3"] = pos3
+    x, positions, pos3 = _embed_inputs(cfg, params, batch)
+    x, caches, _ = _run_decoder_stack(
+        cfg, params, x, positions=positions, pos3=pos3,
+        caches=caches, cache_index=cache_index, remat=False,
+    )
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    return _logits(cfg, params, x)[:, 0], caches

@@ -1,0 +1,1 @@
+from repro.optim.adam import adam_init, adam_update, sgd_init, sgd_update, clip_by_global_norm  # noqa: F401

@@ -1,0 +1,102 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+AdamW and SGD-momentum, plus global-norm clipping. State and update are
+plain pytrees so they shard transparently under pjit (optimizer state
+inherits the parameter sharding, or a ZeRO-style sharded spec — see
+repro.dist.sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Params
+    nu: Params
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.zeros_like, zeros))
+
+
+def adam_update(
+    grads: Params,
+    state: AdamState,
+    params: Params,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Params, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * jnp.square(g32)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta.astype(p.dtype)), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+class SGDState(NamedTuple):
+    velocity: Params
+
+
+def sgd_init(params: Params) -> SGDState:
+    return SGDState(velocity=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def sgd_update(
+    grads: Params,
+    state: SGDState,
+    params: Params,
+    *,
+    lr: float = 1e-2,
+    momentum: float = 0.9,
+) -> tuple[Params, SGDState]:
+    def upd(g, v, p):
+        v = momentum * v + g.astype(jnp.float32)
+        return (p - lr * v.astype(p.dtype)), v
+
+    pairs = jax.tree.map(upd, grads, state.velocity, params)
+    new_p = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, SGDState(velocity=new_v)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jnp.ndarray]:
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads),
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm

@@ -1,0 +1,26 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import paper_graph
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    """One small graph per paper category (session-cached)."""
+    return {key: paper_graph(key, scale=0.01, seed=0) for key in
+            ["HO", "DI", "EN", "EU", "OR"]}
+
+
+@pytest.fixture(scope="session")
+def or_graph():
+    return paper_graph("OR", scale=0.02, seed=0)
+
+
+@pytest.fixture()
+def node_data(or_graph):
+    rng = np.random.default_rng(0)
+    g = or_graph
+    feats = rng.normal(size=(g.num_vertices, 16)).astype(np.float32)
+    labels = rng.integers(0, 5, g.num_vertices).astype(np.int32)
+    train = rng.random(g.num_vertices) < 0.3
+    return feats, labels, train

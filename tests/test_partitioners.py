@@ -1,0 +1,158 @@
+"""Partitioner invariants: unit + property-based (hypothesis).
+
+System invariants per DESIGN.md §3:
+  * edge partitioners assign every edge to exactly one partition
+  * vertex partitioners assign every vertex to exactly one partition
+  * deterministic given a seed
+  * quality metrics in their mathematical ranges
+  * the paper's quality ORDERING holds on every graph category:
+      RF: hep100 <= hdrf <= random;  cut: kahip/metis < random
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
+from repro.core.graph import generate_graph, paper_graph
+from repro.core.metrics import (
+    edge_partition_metrics,
+    vertex_partition_metrics,
+)
+from repro.core.vertex_partition import VERTEX_PARTITIONERS, partition_vertices
+
+
+@pytest.mark.parametrize("method", sorted(EDGE_PARTITIONERS))
+@pytest.mark.parametrize("k", [2, 5, 8])
+def test_edge_partition_complete_and_valid(small_graphs, method, k):
+    g = small_graphs["EN"]
+    a = partition_edges(g, k, method, seed=3)
+    assert a.shape == (g.num_edges,)
+    assert a.min() >= 0 and a.max() < k
+    m = edge_partition_metrics(g, a, k)
+    assert m.replication_factor >= 1.0
+    assert m.replication_factor <= k
+    assert m.edge_balance >= 1.0
+    assert m.vertex_balance >= 1.0
+    assert m.edges_per_partition.sum() == g.num_edges
+
+
+@pytest.mark.parametrize("method", sorted(VERTEX_PARTITIONERS))
+@pytest.mark.parametrize("k", [2, 5, 8])
+def test_vertex_partition_complete_and_valid(small_graphs, method, k):
+    g = small_graphs["EU"]
+    a = partition_vertices(g, k, method, seed=3)
+    assert a.shape == (g.num_vertices,)
+    assert a.min() >= 0 and a.max() < k
+    m = vertex_partition_metrics(g, a, k)
+    assert 0.0 <= m.edge_cut <= 1.0
+    assert m.vertices_per_partition.sum() == g.num_vertices
+
+
+@pytest.mark.parametrize("method", sorted(EDGE_PARTITIONERS))
+def test_edge_partition_deterministic(small_graphs, method):
+    g = small_graphs["DI"]
+    a1 = partition_edges(g, 4, method, seed=11)
+    a2 = partition_edges(g, 4, method, seed=11)
+    np.testing.assert_array_equal(a1, a2)
+
+
+@pytest.mark.parametrize("method", sorted(VERTEX_PARTITIONERS))
+def test_vertex_partition_deterministic(small_graphs, method):
+    g = small_graphs["DI"]
+    a1 = partition_vertices(g, 4, method, seed=11)
+    a2 = partition_vertices(g, 4, method, seed=11)
+    np.testing.assert_array_equal(a1, a2)
+
+
+@pytest.mark.parametrize("graph_key", ["OR", "EN", "EU", "DI", "HO"])
+def test_paper_quality_ordering_edge(small_graphs, graph_key):
+    """Paper Fig. 2: HEP produces the lowest RF, random the highest."""
+    g = small_graphs[graph_key]
+    k = 8
+    rf = {
+        m: edge_partition_metrics(g, partition_edges(g, k, m, seed=1), k)
+        .replication_factor
+        for m in ["random", "hdrf", "hep100"]
+    }
+    assert rf["hep100"] <= rf["hdrf"] * 1.2
+    assert rf["hdrf"] < rf["random"]
+    assert rf["hep100"] < rf["random"]
+
+
+@pytest.mark.parametrize("graph_key", ["OR", "EU", "DI"])
+def test_paper_quality_ordering_vertex(small_graphs, graph_key):
+    """Paper Fig. 13: kahip/metis cut << random cut."""
+    g = small_graphs[graph_key]
+    k = 8
+    cut = {
+        m: vertex_partition_metrics(g, partition_vertices(g, k, m, seed=1), k)
+        .edge_cut
+        for m in ["random", "metis", "kahip"]
+    }
+    assert cut["metis"] < cut["random"] * 0.9
+    assert cut["kahip"] < cut["random"] * 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=20, max_value=300),
+    avg_deg=st.integers(min_value=2, max_value=10),
+    k=st.integers(min_value=2, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    category=st.sampled_from(["social", "web", "road"]),
+)
+def test_property_edge_partitions(n, avg_deg, k, seed, category):
+    """Property: for ANY graph/partitioner, assignment is total, RF and
+    balances are in range, and the vertex cover counts are consistent."""
+    g = generate_graph(category, n, n * avg_deg, seed=seed)
+    if g.num_edges == 0:
+        return
+    for method in ["random", "dbh", "2ps-l"]:
+        a = partition_edges(g, k, method, seed=seed % 1000)
+        m = edge_partition_metrics(g, a, k)
+        assert 1.0 <= m.replication_factor <= k
+        assert m.edges_per_partition.sum() == g.num_edges
+        # cover of partition i is at most 2x its edge count and at least 1
+        nz = m.edges_per_partition > 0
+        assert (m.vertices_per_partition[nz] <= 2 * m.edges_per_partition[nz]).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=20, max_value=300),
+    avg_deg=st.integers(min_value=2, max_value=8),
+    k=st.integers(min_value=2, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_vertex_partitions(n, avg_deg, k, seed):
+    g = generate_graph("social", n, n * avg_deg, seed=seed)
+    for method in ["random", "ldg", "bytegnn"]:
+        a = partition_vertices(g, k, method, seed=seed % 1000)
+        m = vertex_partition_metrics(g, a, k)
+        assert 0.0 <= m.edge_cut <= 1.0
+        assert m.vertices_per_partition.sum() == g.num_vertices
+        # recompute cut independently
+        cut = float((a[g.src] != a[g.dst]).mean()) if g.num_edges else 0.0
+        assert abs(cut - m.edge_cut) < 1e-9
+
+
+def test_partition_book_roundtrip(small_graphs):
+    """Replication bookkeeping: every vertex has exactly one master; the
+    number of (partition, vertex) pairs equals RF * covered vertices."""
+    from repro.core.partition_book import build_edge_book
+
+    g = small_graphs["OR"]
+    k = 6
+    a = partition_edges(g, k, "hdrf", seed=2)
+    book = build_edge_book(g, a, k)
+    masters = book.master & book.vmask
+    covered = np.unique(np.concatenate([g.src, g.dst]))
+    assert masters.sum() == covered.shape[0]
+    m = edge_partition_metrics(g, a, k)
+    assert book.vmask.sum() == int(round(m.replication_factor * covered.shape[0]))
+    # every real edge endpoint is a valid local slot
+    assert (book.esrc[book.emask] < book.v_max).all()
+    assert (book.edst[book.emask] < book.v_max).all()
+    # padding waste is a fraction
+    assert 0.0 <= book.padding_waste() <= 1.0

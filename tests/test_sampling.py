@@ -1,0 +1,93 @@
+"""Mini-batch sampler properties (DistDGL regime)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import generate_graph
+from repro.core.vertex_partition import partition_vertices
+from repro.gnn.sampling import PAPER_FANOUTS, SamplePlan, sample_blocks
+
+
+def _sample(g, seeds, fanouts, seed=0, owner=None, worker=0):
+    plan = SamplePlan.build(len(seeds), fanouts)
+    rng = np.random.default_rng(seed)
+    labels = np.zeros(g.num_vertices, np.int32)
+    return plan, sample_blocks(
+        g, np.asarray(seeds, np.int64), fanouts, plan, rng, labels,
+        owner=owner, worker=worker,
+    )
+
+
+@pytest.mark.parametrize("layers", [2, 3, 4])
+def test_fanout_bounds(or_graph, layers):
+    fanouts = PAPER_FANOUTS[layers]
+    seeds = np.arange(16)
+    plan, batch = _sample(or_graph, seeds, fanouts)
+    assert len(batch.layers) == layers
+    for li, lay in enumerate(batch.layers):
+        deg = lay.sampled_deg[:-1]
+        assert deg.max() <= fanouts[li]
+    # seeds form the final output prefix
+    assert int(batch.layers[-1].n_dst) == len(seeds)
+
+
+def test_edges_reference_valid_positions(or_graph):
+    seeds = np.arange(12)
+    plan, batch = _sample(or_graph, seeds, (5, 3))
+    for li, lay in enumerate(batch.layers):
+        pad = plan.layers[li]
+        assert (lay.esrc[lay.emask] < pad.n_src).all()
+        assert (lay.edst[lay.emask] < int(lay.n_dst)).all()
+
+
+def test_remote_vertex_accounting(or_graph):
+    owner = partition_vertices(or_graph, 4, "metis", seed=0)
+    seeds = np.where(owner == 1)[0][:16]
+    plan, batch = _sample(or_graph, seeds, (5, 5), owner=owner, worker=1)
+    ids = batch.input_ids[batch.input_mask]
+    expect_remote = int((owner[ids] != 1).sum())
+    assert batch.num_remote == expect_remote
+    assert batch.num_input == ids.shape[0]
+
+
+def test_better_partition_fewer_remote(or_graph):
+    """Paper Fig. 22b/24c: metis yields fewer remote vertices than random."""
+    totals = {}
+    for method in ["random", "metis"]:
+        owner = partition_vertices(or_graph, 4, method, seed=0)
+        remote = 0
+        for w in range(4):
+            pool = np.where(owner == w)[0][:24]
+            if pool.size == 0:
+                continue
+            _, b = _sample(or_graph, pool, (10, 10), seed=5, owner=owner, worker=w)
+            remote += b.num_remote
+        totals[method] = remote
+    assert totals["metis"] < totals["random"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=30, max_value=200),
+    f1=st.integers(min_value=1, max_value=8),
+    f2=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_sampler(n, f1, f2, seed):
+    g = generate_graph("social", n, n * 4, seed=seed)
+    seeds = np.arange(min(8, g.num_vertices))
+    plan, batch = _sample(g, seeds, (f1, f2), seed=seed)
+    # inputs unique & within range
+    ids = batch.input_ids[batch.input_mask]
+    assert len(np.unique(ids)) == len(ids)
+    assert ids.max(initial=0) < g.num_vertices
+    # every sampled edge is a real graph edge
+    indptr, indices = g.csr()
+    frontier0 = ids
+    lay = batch.layers[0]
+    for e in np.where(lay.emask)[0][:50]:
+        src_g = frontier0[lay.esrc[e]]
+        # dst position indexes the dst frontier, a prefix of the src frontier
+        dst_g = frontier0[lay.edst[e]]
+        assert src_g in indices[indptr[dst_g]: indptr[dst_g + 1]]

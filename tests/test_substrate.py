@@ -1,0 +1,148 @@
+"""Substrate: optimizer, checkpointing, elastic restore, compression,
+minibatch straggler mitigation, study harness sanity."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam_init, adam_update, clip_by_global_norm
+from repro.optim.compress import compress_init, compressed_psum
+
+
+def test_adam_converges_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    state = adam_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state = adam_update(grads, state, params, lr=5e-2)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert abs(total - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.ckpt import CheckpointManager
+
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "step": jnp.asarray(3)}
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    mgr.maybe_save(0, tree)
+    mgr.maybe_save(1, jax.tree.map(lambda x: x + 1, tree))
+    mgr.maybe_save(2, jax.tree.map(lambda x: x + 2, tree))
+    # keep=2: step_0 garbage-collected
+    names = sorted(os.listdir(tmp_path))
+    assert "step_0000000000" not in names
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(tree["w"]) + 2)
+
+
+def test_checkpoint_ignores_partial(tmp_path):
+    """A crash mid-write must never corrupt restores."""
+    from repro.ckpt import CheckpointManager, save_checkpoint
+
+    tree = {"w": jnp.ones((4,))}
+    save_checkpoint(str(tmp_path), 5, tree)
+    # fake a partial write
+    os.makedirs(tmp_path / "step_0000000009.tmp")
+    (tmp_path / "step_0000000009.tmp" / "leaf_00000.npy").write_bytes(b"junk")
+    mgr = CheckpointManager(str(tmp_path))
+    step, restored = mgr.restore({"w": jnp.zeros((4,))})
+    assert step == 5
+    np.testing.assert_allclose(np.asarray(restored["w"]), 1.0)
+
+
+def test_train_resume_deterministic(tmp_path):
+    """Crash/restart must land on the same trajectory: train 10 steps
+    straight vs train 6, 'crash', resume to 10."""
+    from repro.launch.train import train
+
+    losses_straight = train(
+        "qwen1.5-0.5b", steps=10, batch=2, seq=32, seed=5,
+        ckpt_dir=None, log_every=100,
+    )
+    d = str(tmp_path / "ck")
+    train("qwen1.5-0.5b", steps=6, batch=2, seq=32, seed=5,
+          ckpt_dir=d, ckpt_every=5, log_every=100)
+    losses_resumed = train(
+        "qwen1.5-0.5b", steps=10, batch=2, seq=32, seed=5,
+        ckpt_dir=d, ckpt_every=5, log_every=100,
+    )
+    # resumed run re-executes steps 6..9; compare the final losses
+    np.testing.assert_allclose(losses_resumed[-1], losses_straight[-1],
+                               rtol=1e-4)
+
+
+def test_compressed_psum_error_feedback():
+    """int8 error-feedback compression: the *accumulated* update over many
+    steps converges to the true mean despite per-step quantisation."""
+    rng = np.random.default_rng(0)
+    k = 4
+    grads_per_worker = jnp.asarray(rng.normal(size=(k, 64)), jnp.float32)
+    true_mean = grads_per_worker.mean(axis=0)
+
+    def per_worker(g, state):
+        return compressed_psum({"g": g}, state, "dp")
+
+    states = jax.vmap(lambda g: compress_init({"g": g}))(grads_per_worker)
+    acc = jnp.zeros((64,))
+    exact = jnp.zeros((64,))
+    for step in range(50):
+        out, states = jax.vmap(per_worker, axis_name="dp")(
+            grads_per_worker, states)
+        acc = acc + out["g"][0]
+        exact = exact + true_mean
+    err = float(jnp.abs(acc - exact).max() / jnp.abs(exact).max())
+    assert err < 0.02, err
+
+
+def test_straggler_rebalance_reduces_imbalance(or_graph, node_data):
+    """Dynamic seed re-balancing shifts load away from heavy workers."""
+    from repro.core.vertex_partition import partition_vertices
+    from repro.gnn.minibatch import MiniBatchTrainer
+    from repro.gnn.models import GNNSpec
+
+    feats, labels, train = node_data
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    a = partition_vertices(or_graph, 4, "spinner", seed=0)
+
+    def run(rebalance):
+        tr = MiniBatchTrainer.build(
+            or_graph, a, 4, spec, feats, labels, train,
+            global_batch=64, seed=3, rebalance=rebalance,
+        )
+        imb = []
+        for _ in range(6):
+            m = tr.train_step()
+            imb.append(m.input_vertices.max() / max(m.input_vertices.mean(), 1))
+        return np.mean(imb[2:])  # after EMA warmup
+
+    assert run(True) <= run(False) * 1.1
+
+
+def test_study_rows_consistent():
+    from repro.core.study import StudyCache, fullbatch_row, fullbatch_speedup
+    from repro.gnn.models import GNNSpec
+
+    cache = StudyCache()
+    spec = GNNSpec(model="sage", feature_dim=64, hidden_dim=32, num_classes=8,
+                   num_layers=2)
+    rows = [fullbatch_row("OR", m, 4, spec, scale=0.01, cache=cache)
+            for m in ["random", "hep100"]]
+    sp = fullbatch_speedup(rows)
+    by = {r["method"]: r for r in sp}
+    assert by["random"]["speedup"] == 1.0
+    assert by["hep100"]["speedup"] >= 1.0
+    assert by["hep100"]["memory_pct_random"] <= 100.0
