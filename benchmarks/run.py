@@ -1,8 +1,16 @@
 """Run every paper-figure/table benchmark. Prints name,us_per_call,derived
 CSV. One module per paper artifact (DESIGN.md §8); roofline reads the
-dry-run cache."""
+dry-run cache.
 
+Flags:
+  --smoke        seconds-fast CI path: trimmed grids (BENCH_FAST=1) at a
+                 small graph scale (BENCH_SCALE=0.02 unless already set)
+  --only SUBSTR  run only modules whose name contains SUBSTR
+"""
+
+import argparse
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -22,14 +30,27 @@ MODULES = [
     "benchmarks.fig22_scaleout_distdgl",
     "benchmarks.fig24_batchsize",
     "benchmarks.tab3_amortization",
+    "benchmarks.fig_cache_sweep",
     "benchmarks.roofline",
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: trimmed grid, small graph scale")
+    ap.add_argument("--only", default="",
+                    help="run only modules whose name contains this substring")
+    args = ap.parse_args()
+    if args.smoke:
+        # must be set before benchmarks.common is first imported
+        os.environ["BENCH_FAST"] = "1"
+        os.environ.setdefault("BENCH_SCALE", "0.02")
+
+    modules = [m for m in MODULES if args.only in m]
     print("name,us_per_call,derived")
     failures = 0
-    for name in MODULES:
+    for name in modules:
         t0 = time.perf_counter()
         try:
             importlib.import_module(name).main()

@@ -16,6 +16,7 @@ Conventions: times in seconds, sizes in bytes, rates in bytes/s or flop/s.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -161,6 +162,9 @@ def minibatch_step(
     spec: GNNSpec,
     cluster: ClusterSpec = PAPER_CLUSTER,
     seeds_per_worker: int = 64,
+    *,
+    remote_miss_vertices: Optional[np.ndarray] = None,
+    cached_vertices: Optional[np.ndarray] = None,
 ) -> MiniBatchEstimate:
     """DistDGL step estimate from real per-worker sampled-batch metrics.
 
@@ -169,14 +173,23 @@ def minibatch_step(
     network), forward+backward (dense flops on the sampled block), update
     (negligible). Step time = slowest worker (straggler) + gradient
     all-reduce.
+
+    With a per-worker feature cache (gnn/feature_store.py), only cache
+    *misses* cross the network: pass `remote_miss_vertices` [k] to price the
+    fetch phase from missed bytes (default: every remote vertex misses, the
+    uncached DistDGL behavior) and `cached_vertices` [k] to charge the cache
+    copies to worker memory. Sampling still pays `remote_vertices` adjacency
+    costs — the cache holds features, not adjacency.
     """
     input_vertices = input_vertices.astype(np.float64)
     remote = remote_vertices.astype(np.float64)
     edges = edges.astype(np.float64)
+    miss = (remote if remote_miss_vertices is None
+            else remote_miss_vertices.astype(np.float64))
 
     sample = (edges / cluster.sample_rate + remote * cluster.remote_adj_cost
               + cluster.sample_hop_overhead * spec.num_layers)
-    fetch_bytes = remote * spec.feature_dim * 4
+    fetch_bytes = miss * spec.feature_dim * 4
     fetch = fetch_bytes / cluster.net_bw + cluster.net_latency
 
     # dense flops: each sampled edge moves a d-dim message once per layer;
@@ -197,6 +210,8 @@ def minibatch_step(
         + input_vertices * f * 4                            # fetched cache
         + input_vertices * spec.hidden_dim * 4 * spec.num_layers * 2
     )
+    if cached_vertices is not None:                        # static feature cache
+        memory = memory + cached_vertices.astype(np.float64) * f * 4
     return MiniBatchEstimate(
         step_time=float(per_worker.max() + allreduce),
         sample_time=sample,

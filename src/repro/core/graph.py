@@ -296,9 +296,13 @@ def generate_graph(
         keep = rng.permutation(src.shape[0])[:num_edges]
         keep.sort()
         src, dst = src[keep], dst[keep]
+    # Honor the requested vertex count for every category: keep isolated
+    # vertices (ids past the max referenced id) instead of silently shrinking
+    # |V|, which would skew vertex-balance metrics. Road grids may exceed the
+    # request because the generator rounds |V| up to a full square.
     n = int(max(src.max(initial=0), dst.max(initial=0))) + 1 if src.size else num_vertices
     g = Graph(
-        num_vertices=max(n, num_vertices if category == "road" else n),
+        num_vertices=max(n, num_vertices),
         src=src.astype(np.int32),
         dst=dst.astype(np.int32),
         directed=directed,

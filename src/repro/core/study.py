@@ -186,10 +186,16 @@ def minibatch_row(
     cache: Optional[StudyCache] = None,
     train_frac: float = 0.3,
     run_device_step: bool = False,
+    cache_policy: str = "none",
+    cache_budget: int = 0,
 ) -> dict:
     """One DistDGL study row: REAL sampling on the real partition, cost-model
     cluster times. `run_device_step=True` additionally runs the jitted
-    data-parallel train step (slower; used by integration tests)."""
+    data-parallel train step (slower; used by integration tests).
+    `cache_policy`/`cache_budget` configure the per-worker feature cache
+    (gnn/feature_store.py); network fetch is then priced from cache misses."""
+    from repro.gnn.feature_store import FeatureStore
+
     cache = cache or _GLOBAL_CACHE
     g = cache.graph(graph_key, scale, 0)
     rng = np.random.default_rng(1234)
@@ -202,20 +208,28 @@ def minibatch_row(
         tr = MiniBatchTrainer.build(
             g, rec.assignment, k, spec, feats, labels, train_mask,
             global_batch=global_batch, seed=seed,
+            cache_policy=cache_policy, cache_budget=cache_budget,
         )
+        store = tr.store
         ms = [tr.train_step() for _ in range(steps)]
         inputs = np.stack([m.input_vertices for m in ms]).mean(axis=0)
         remote = np.stack([m.remote_vertices for m in ms]).mean(axis=0)
         edges = np.stack([m.edges for m in ms]).mean(axis=0)
+        hits = np.stack([m.cache_hits for m in ms]).mean(axis=0)
+        misses = np.stack([m.remote_misses for m in ms]).mean(axis=0)
     else:
         # sampling only (fast path): identical metrics, no device compute
         from repro.gnn.sampling import SamplePlan, sample_blocks
 
+        store = FeatureStore.build(
+            g, rec.book, policy=cache_policy, budget=cache_budget,
+            feature_dim=spec.feature_dim, seed=seed,
+        )
         fanouts = PAPER_FANOUTS[spec.num_layers]
         spw = max(global_batch // k, 1)
         plan = SamplePlan.build(spw, fanouts)
         labels = np.zeros(g.num_vertices, np.int32)
-        per = [[], [], []]
+        per = [[], [], [], [], []]
         srng = np.random.default_rng(seed)
         train_ids = np.where(train_mask)[0]
         pools = [train_ids[rec.assignment[train_ids] == w] for w in range(k)]
@@ -229,17 +243,23 @@ def minibatch_row(
                 s = srng.choice(pool, size=min(spw, pool.shape[0]), replace=False)
                 b = sample_blocks(g, s.astype(np.int64), fanouts, plan, srng,
                                   labels, owner=rec.assignment, worker=w)
+                fs = store.stats(w, b.input_ids[b.input_mask])
                 per[0].append(b.num_input)
                 per[1].append(b.num_remote)
                 per[2].append(b.num_edges)
+                per[3].append(fs.num_cache_hit)
+                per[4].append(fs.num_remote_miss)
         inputs = np.array(per[0], dtype=np.float64).reshape(steps, k).mean(axis=0)
         remote = np.array(per[1], dtype=np.float64).reshape(steps, k).mean(axis=0)
         edges = np.array(per[2], dtype=np.float64).reshape(steps, k).mean(axis=0)
+        hits = np.array(per[3], dtype=np.float64).reshape(steps, k).mean(axis=0)
+        misses = np.array(per[4], dtype=np.float64).reshape(steps, k).mean(axis=0)
 
     owned = rec.book.sizes.astype(np.float64)
     est = cost_model.minibatch_step(
         inputs, remote, edges, owned, spec, cluster,
         seeds_per_worker=max(global_batch // k, 1),
+        remote_miss_vertices=misses, cached_vertices=store.cache_sizes,
     )
     train_total = int(train_mask.sum())
     steps_per_epoch = max(train_total // global_batch, 1)
@@ -255,6 +275,11 @@ def minibatch_row(
         "input_vertices": float(inputs.mean()),
         "input_vertex_balance": float(inputs.max() / max(inputs.mean(), 1e-9)),
         "remote_vertices": float(remote.sum()),
+        "cache_policy": cache_policy,
+        "cache_budget": int(cache_budget),
+        "cache_hits": float(hits.sum()),
+        "remote_misses": float(misses.sum()),
+        "hit_rate": float(hits.sum() / remote.sum()) if remote.sum() else 1.0,
         "fetch_bytes": float(est.fetch_bytes.sum()),
         "step_time": est.step_time,
         "epoch_time": est.step_time * steps_per_epoch,

@@ -397,6 +397,17 @@ def _fm_refine(
     return part.astype(np.int32)
 
 
+def _finest_level(graph: Graph) -> _Level:
+    w = np.ones(graph.num_edges, dtype=np.int64)
+    indptr, indices, ew = _build_weighted_csr(
+        graph.num_vertices, graph.src.astype(np.int64), graph.dst.astype(np.int64), w
+    )
+    return _Level(
+        graph.num_vertices, indptr, indices, ew,
+        np.ones(graph.num_vertices, dtype=np.int64), None,
+    )
+
+
 def _multilevel(
     graph: Graph,
     k: int,
@@ -407,14 +418,7 @@ def _multilevel(
     coarsen_to: int = 256,
 ) -> np.ndarray:
     rng = np.random.default_rng(seed)
-    w = np.ones(graph.num_edges, dtype=np.int64)
-    indptr, indices, ew = _build_weighted_csr(
-        graph.num_vertices, graph.src.astype(np.int64), graph.dst.astype(np.int64), w
-    )
-    finest = _Level(
-        graph.num_vertices, indptr, indices, ew,
-        np.ones(graph.num_vertices, dtype=np.int64), None,
-    )
+    finest = _finest_level(graph)
     levels = [finest]
     while levels[-1].num_vertices > max(coarsen_to, 4 * k):
         nxt = _coarsen(levels[-1], rng)
@@ -460,12 +464,14 @@ def kahip_like(graph: Graph, k: int, seed: int = 0, repeats: int = 3, **_) -> np
     best cut — exactly its profile in the paper (Fig. 13/15)."""
     best: Optional[np.ndarray] = None
     best_cut = np.inf
-    cut_part = None
+    finest = _finest_level(graph)
     for r in range(repeats):
         part = _multilevel(
             graph, k, seed + 1000 * r, refine_passes=8, vcycles=1, allow_zero_gain=True
         )
         # One final positive-gain-only cleanup pass counters zero-gain drift.
+        rng = np.random.default_rng(seed + 1000 * r + 17)
+        part = _fm_refine(finest, part, k, rng, 2, allow_zero_gain=False)
         cut = float((part[graph.src] != part[graph.dst]).sum())
         if cut < best_cut:
             best_cut = cut

@@ -1,1 +1,6 @@
+from repro.gnn.feature_store import (  # noqa: F401
+    CACHE_POLICIES,
+    FeatureStore,
+    FetchStats,
+)
 from repro.gnn.models import GNNSpec, init_params  # noqa: F401

@@ -1,0 +1,232 @@
+"""Per-worker distributed feature store with pluggable static caching.
+
+The paper's DistDGL analysis (§5.1, Figs. 16-19) shows that *feature loading
+of remote input vertices* is the dominant, partitioning-sensitive cost of
+mini-batch training. Real systems attack it with a per-worker cache of hot
+remote vertex features (PaGraph, BGL, DistDGL's node-feature cache): the
+cache is populated once from static graph information, and every mini-batch
+lookup is served from {local shard, cache, remote fetch}.
+
+This module reproduces that layer. Each worker w of a
+`VertexPartitionBook` owns its partition's feature rows; on top it holds a
+bounded static cache of remote vertices selected by one of four policies:
+
+  none    — no cache (DistDGL default; every remote vertex crosses the net)
+  random  — uniform random remote vertices (ablation baseline)
+  degree  — highest-degree remote vertices (PaGraph/BGL-style; power-law
+            graphs concentrate sampled traffic on hubs)
+  halo    — 1-hop boundary neighbors: remote vertices adjacent to w's
+            partition, ranked by how many cut edges bind them to w (the
+            vertices sampling is most likely to touch first)
+
+`lookup()` splits a sampled batch's input vertices into
+{local, cache-hit, remote-miss} with one vectorised pass and returns the
+assembled feature block plus a `FetchStats` record (counts and bytes per
+class). Only *miss* bytes cross the network — `core/cost_model.py` prices
+the feature-loading phase from them. Note the asymmetry with sampling:
+caching features does NOT cache adjacency, so remote-adjacency sampling
+costs still scale with all remote vertices.
+
+Budgets are vertices per worker (`cache_budget`); `halo` may under-fill its
+budget when the boundary is smaller than the budget — that is the policy's
+defining property, not a bug.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition_book import VertexPartitionBook
+
+__all__ = ["CACHE_POLICIES", "FetchStats", "FeatureStore", "select_cache_vertices"]
+
+CACHE_POLICIES = ("none", "random", "degree", "halo")
+
+
+class FetchStats(NamedTuple):
+    """Per-lookup feature-loading accounting (one worker, one batch)."""
+
+    num_input: int
+    num_local: int
+    num_cache_hit: int
+    num_remote_miss: int
+    local_bytes: int
+    hit_bytes: int
+    miss_bytes: int
+
+    @property
+    def num_remote(self) -> int:
+        return self.num_cache_hit + self.num_remote_miss
+
+    @property
+    def hit_rate(self) -> float:
+        """Cache hits / remote requests (1.0 when nothing is remote)."""
+        return self.num_cache_hit / self.num_remote if self.num_remote else 1.0
+
+    @classmethod
+    def merge(cls, stats: "list[FetchStats]") -> "FetchStats":
+        return cls(*(int(sum(s[i] for s in stats)) for i in range(7)))
+
+
+def select_cache_vertices(
+    graph: Graph,
+    book: VertexPartitionBook,
+    policy: str,
+    budget: int,
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Static cache contents: per worker, the global ids of cached remote
+    vertices (deterministic given seed; each array has <= budget entries)."""
+    if policy not in CACHE_POLICIES:
+        raise ValueError(f"unknown cache policy {policy!r}; options: {CACHE_POLICIES}")
+    k, V = book.k, book.num_vertices
+    owner = book.owner
+    if policy == "none" or budget <= 0:
+        return [np.zeros(0, np.int64) for _ in range(k)]
+
+    if policy == "degree":
+        # Hub-first: one global degree order, filtered per worker.
+        order = np.argsort(-graph.degrees(), kind="stable")
+        return [order[owner[order] != w][:budget].astype(np.int64) for w in range(k)]
+
+    if policy == "halo":
+        # Boundary-first: remote endpoints of cut edges, ranked by the number
+        # of cut edges binding them to this partition (ties: degree, then id).
+        src = graph.src.astype(np.int64)
+        dst = graph.dst.astype(np.int64)
+        cut = owner[src] != owner[dst]
+        cs, cd = src[cut], dst[cut]
+        pw = np.concatenate([owner[cs], owner[cd]]).astype(np.int64)
+        pv = np.concatenate([cd, cs])
+        uniq, counts = np.unique(pw * V + pv, return_counts=True)
+        w_of = (uniq // V).astype(np.int64)
+        v_of = (uniq % V).astype(np.int64)
+        deg = graph.degrees()
+        out = []
+        for w in range(k):
+            sel = w_of == w
+            v, c = v_of[sel], counts[sel]
+            order = np.lexsort((v, -deg[v], -c))
+            out.append(v[order][:budget])
+        return out
+
+    # random baseline
+    out = []
+    for w in range(k):
+        remote = np.where(owner != w)[0]
+        rng = np.random.default_rng(seed + 7919 * w)
+        n = min(budget, remote.shape[0])
+        pick = rng.choice(remote, size=n, replace=False) if n else remote[:0]
+        out.append(np.sort(pick).astype(np.int64))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureStore:
+    """Distributed feature store: owner shards + per-worker static caches.
+
+    `features` (the global [V, F] array) doubles as the union of owner
+    shards and as the remote KV store for misses; cache hits are served from
+    `cache_rows`, the feature copies frozen at build time — so a stale cache
+    would be *observable*, not silently papered over.
+    """
+
+    book: VertexPartitionBook
+    policy: str
+    budget: int
+    feature_dim: int
+    bytes_per_row: int
+    # Per-worker caches as SORTED id arrays (membership via searchsorted) —
+    # O(sum cache sizes) memory, not O(k * V). cache_rows is aligned with
+    # cache_ids, so the searchsorted position doubles as the row index.
+    cache_ids: np.ndarray           # int64 [k, max_cache]; pad -> num_vertices
+    cache_sizes: np.ndarray         # int64 [k]: true cache entries per worker
+    cache_rows: Optional[np.ndarray]  # [k, max_cache, F] cached copies
+    features: Optional[np.ndarray]    # global [V, F] (None = accounting-only)
+
+    @classmethod
+    def build(
+        cls,
+        graph: Graph,
+        book: VertexPartitionBook,
+        *,
+        policy: str = "none",
+        budget: int = 0,
+        features: Optional[np.ndarray] = None,
+        feature_dim: Optional[int] = None,
+        seed: int = 0,
+    ) -> "FeatureStore":
+        """Build the store. With `features=None` the store is accounting-only
+        (split/stats work, gather does not) — `feature_dim` then sizes the
+        byte metrics."""
+        if features is not None:
+            feature_dim = int(features.shape[1])
+        if feature_dim is None:
+            raise ValueError("need features or feature_dim for byte accounting")
+        ids = select_cache_vertices(graph, book, policy, budget, seed=seed)
+        ids = [np.sort(c) for c in ids]
+        sizes = np.array([c.shape[0] for c in ids], dtype=np.int64)
+        max_cache = int(sizes.max()) if sizes.size else 0
+        # pad with num_vertices: sorts after every real id, never matches one
+        cache_ids = np.full((book.k, max_cache), book.num_vertices, dtype=np.int64)
+        rows = None
+        if features is not None:
+            rows = np.zeros((book.k, max_cache, feature_dim), dtype=features.dtype)
+        for w, cw in enumerate(ids):
+            cache_ids[w, : cw.shape[0]] = cw
+            if rows is not None:
+                rows[w, : cw.shape[0]] = features[cw]
+        return cls(
+            book=book, policy=policy, budget=int(budget),
+            feature_dim=feature_dim, bytes_per_row=4 * feature_dim,
+            cache_ids=cache_ids, cache_sizes=sizes, cache_rows=rows,
+            features=features,
+        )
+
+    def cached_ids(self, worker: int) -> np.ndarray:
+        """Global ids cached at `worker` (sorted, cache-row order)."""
+        return self.cache_ids[worker, : self.cache_sizes[worker]]
+
+    def split(self, worker: int, ids: np.ndarray):
+        """Vectorised {local, cache-hit, remote-miss} split of input ids."""
+        ids = np.asarray(ids, dtype=np.int64)
+        local = self.book.owner[ids] == worker
+        cached = self.cached_ids(worker)
+        if cached.shape[0] == 0:
+            hit = np.zeros_like(local)
+        else:
+            pos = np.minimum(np.searchsorted(cached, ids), cached.shape[0] - 1)
+            hit = ~local & (cached[pos] == ids)
+        miss = ~local & ~hit
+        return local, hit, miss
+
+    def _stats_of(self, ids: np.ndarray, local, hit, miss) -> FetchStats:
+        nl, nh, nm = int(local.sum()), int(hit.sum()), int(miss.sum())
+        b = self.bytes_per_row
+        return FetchStats(
+            num_input=int(ids.shape[0]),
+            num_local=nl, num_cache_hit=nh, num_remote_miss=nm,
+            local_bytes=nl * b, hit_bytes=nh * b, miss_bytes=nm * b,
+        )
+
+    def stats(self, worker: int, ids: np.ndarray) -> FetchStats:
+        ids = np.asarray(ids, dtype=np.int64)
+        return self._stats_of(ids, *self.split(worker, ids))
+
+    def gather(self, worker: int, ids: np.ndarray) -> tuple[np.ndarray, FetchStats]:
+        """Assemble the feature block for `ids` from shard/cache/remote and
+        return it with the phase accounting."""
+        if self.features is None:
+            raise ValueError("accounting-only store (built without features)")
+        ids = np.asarray(ids, dtype=np.int64)
+        local, hit, miss = self.split(worker, ids)
+        out = np.empty((ids.shape[0], self.feature_dim), dtype=self.features.dtype)
+        out[local] = self.features[ids[local]]                      # owner shard
+        slot = np.searchsorted(self.cached_ids(worker), ids[hit])
+        out[hit] = self.cache_rows[worker, slot]
+        out[miss] = self.features[ids[miss]]                        # remote fetch
+        return out, self._stats_of(ids, local, hit, miss)

@@ -101,12 +101,24 @@ class FullBatchTrainer:
             out = fn(params, blk)
             return jax.tree.map(lambda a: a[None], out)
 
-        return jax.shard_map(
+        # jax >= 0.6 exposes jax.shard_map (check_vma); 0.4.x has the
+        # experimental module (check_rep). Same semantics either way.
+        if hasattr(jax, "shard_map"):
+            return jax.shard_map(
+                per_device,
+                mesh=self.mesh,
+                in_specs=(P(), P(AXIS)),
+                out_specs=P(AXIS),
+                check_vma=False,
+            )
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map(
             per_device,
             mesh=self.mesh,
             in_specs=(P(), P(AXIS)),
             out_specs=P(AXIS),
-            check_vma=False,
+            check_rep=False,
         )
 
     # ----------------------------------------------------------------- api

@@ -11,6 +11,17 @@ vertices). A training step is the paper's five phases (§5.1):
   4. backward pass         (device; gradient all-reduce folded in)
   5. model update          (device)
 
+Feature loading (phase 2) is routed through `gnn.feature_store.FeatureStore`:
+each worker serves its own shard locally and holds a bounded static cache of
+hot remote vertices (``cache_policy`` in {none, random, degree, halo},
+``cache_budget`` vertices per worker — see feature_store.py). Per-step
+`StepMetrics` therefore splits the paper's `remote_vertices` into
+`cache_hits` (served locally from the cache) and `remote_misses` (the only
+vertices whose feature bytes cross the network, `miss_bytes`). The cost
+model prices the fetch phase from misses; sampling still pays remote
+adjacency costs for ALL remote vertices because the cache holds features,
+not adjacency.
+
 On this container the k workers are simulated with `jax.vmap(axis_name=...)`
 over stacked per-worker batches — identical collective semantics to the
 multi-worker `shard_map` deployment. Per-phase times for the paper's cluster
@@ -36,6 +47,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook, build_vertex_book
+from repro.gnn.feature_store import FeatureStore, FetchStats
 from repro.gnn.models import GNNSpec, init_params
 from repro.gnn.sampling import (
     PAPER_FANOUTS,
@@ -135,6 +147,16 @@ class StepMetrics:
     edges: np.ndarray            # [k]
     sample_time_host: float      # seconds, wall (whole step, all workers)
     compute_time_host: float
+    # feature-store phase accounting: remote = cache_hits + remote_misses
+    cache_hits: np.ndarray = None      # [k]
+    remote_misses: np.ndarray = None   # [k]
+    miss_bytes: np.ndarray = None      # [k] feature bytes crossing the net
+
+    @property
+    def hit_rate(self) -> float:
+        """Cache hits / remote feature requests, whole step (1.0 if none)."""
+        remote = float(self.remote_vertices.sum())
+        return float(self.cache_hits.sum()) / remote if remote else 1.0
 
 
 @dataclasses.dataclass
@@ -153,6 +175,7 @@ class MiniBatchTrainer:
     rng: Optional[np.random.Generator] = None
     lr: float = 1e-3
     rebalance: bool = False
+    store: Optional[FeatureStore] = None
     _load_ema: Optional[np.ndarray] = None
     _seed_share: Optional[np.ndarray] = None
 
@@ -172,6 +195,8 @@ class MiniBatchTrainer:
         seed: int = 0,
         lr: float = 1e-3,
         rebalance: bool = False,
+        cache_policy: str = "none",
+        cache_budget: int = 0,
     ) -> "MiniBatchTrainer":
         from repro.optim import adam_init
 
@@ -182,13 +207,18 @@ class MiniBatchTrainer:
         seeds_per_worker = max(global_batch // k, 1)
         plan = SamplePlan.build(seeds_per_worker, fanouts)
         params = init_params(spec, seed=seed)
+        features = features.astype(np.float32)
+        store = FeatureStore.build(
+            graph, book, policy=cache_policy, budget=cache_budget,
+            features=features, seed=seed,
+        )
         return cls(
             graph=graph, book=book, spec=spec,
-            features=features.astype(np.float32), labels=labels.astype(np.int32),
+            features=features, labels=labels.astype(np.int32),
             train_vertices_per_worker=per_worker, fanouts=fanouts, plan=plan,
             global_batch=global_batch, params=params,
             opt_state=adam_init(params), rng=np.random.default_rng(seed),
-            lr=lr, rebalance=rebalance,
+            lr=lr, rebalance=rebalance, store=store,
             _load_ema=np.ones(k), _seed_share=np.full(k, 1.0 / k),
         )
 
@@ -209,12 +239,17 @@ class MiniBatchTrainer:
         return out
 
     def _stack_batches(self, batches: list):
-        """Host: gather features (the 'feature loading' phase) and stack."""
+        """Host: the 'feature loading' phase — every worker pulls its input
+        vertices through the feature store ({shard, cache, remote} split) —
+        then stack. Returns (stacked, per-worker FetchStats)."""
         xs = []
-        for b in batches:
-            safe = np.where(b.input_ids >= 0, b.input_ids, 0)
-            x = self.features[safe].copy()
-            x[~b.input_mask] = 0.0
+        fetch: list[FetchStats] = []
+        for w, b in enumerate(batches):
+            x = np.zeros((b.input_ids.shape[0], self.features.shape[1]),
+                         dtype=self.features.dtype)
+            valid = b.input_mask
+            x[valid], st = self.store.gather(w, b.input_ids[valid])
+            fetch.append(st)
             xs.append(x)
         stacked = {
             "x": jnp.asarray(np.stack(xs)),
@@ -230,7 +265,7 @@ class MiniBatchTrainer:
                 for li in range(len(self.fanouts))
             ],
         }
-        return stacked
+        return stacked, fetch
 
     @property
     def _layer_sizes(self) -> list:
@@ -270,7 +305,7 @@ class MiniBatchTrainer:
             for w, s in enumerate(seeds)
         ]
         t1 = time.perf_counter()
-        stacked = self._stack_batches(batches)
+        stacked, fetch = self._stack_batches(batches)
         loss, self.params, self.opt_state = self._train_step(
             self.params, self.opt_state, stacked
         )
@@ -290,4 +325,7 @@ class MiniBatchTrainer:
             edges=np.array([b.num_edges for b in batches]),
             sample_time_host=t1 - t0,
             compute_time_host=t2 - t1,
+            cache_hits=np.array([s.num_cache_hit for s in fetch]),
+            remote_misses=np.array([s.num_remote_miss for s in fetch]),
+            miss_bytes=np.array([s.miss_bytes for s in fetch]),
         )

@@ -21,6 +21,7 @@ from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
 from repro.core.graph import paper_graph
 from repro.core.metrics import edge_partition_metrics, vertex_partition_metrics
 from repro.core.vertex_partition import VERTEX_PARTITIONERS, partition_vertices
+from repro.gnn.feature_store import CACHE_POLICIES
 from repro.gnn.fullbatch import FullBatchTrainer
 from repro.gnn.minibatch import MiniBatchTrainer
 from repro.gnn.models import GNNSpec
@@ -44,6 +45,11 @@ def main() -> None:
     ap.add_argument("--sync", default="halo", choices=["halo", "dense"])
     ap.add_argument("--rebalance", action="store_true",
                     help="dynamic seed rebalancing (straggler mitigation)")
+    ap.add_argument("--cache-policy", default="none",
+                    choices=list(CACHE_POLICIES),
+                    help="per-worker remote-feature cache policy (minibatch)")
+    ap.add_argument("--cache-budget", type=int, default=0,
+                    help="cached remote vertices per worker (minibatch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -95,20 +101,29 @@ def main() -> None:
         tr = MiniBatchTrainer.build(
             g, assignment, args.k, spec, feats, labels, train_mask,
             global_batch=args.batch, seed=args.seed, rebalance=args.rebalance,
+            cache_policy=args.cache_policy, cache_budget=args.cache_budget,
         )
+        if args.cache_budget:
+            print(f"[gnn] feature cache: policy={args.cache_policy} "
+                  f"budget={args.cache_budget}/worker "
+                  f"(filled {tr.store.cache_sizes.tolist()})")
         steps_per_epoch = max(int(train_mask.sum()) // args.batch, 1)
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
-            losses, remotes = [], []
+            losses, remotes, hit_rates = [], [], []
             for _ in range(steps_per_epoch):
                 sm = tr.train_step()
                 losses.append(sm.loss)
                 remotes.append(sm.remote_vertices.sum())
+                hit_rates.append(sm.hit_rate)
             est = cost_model.minibatch_step(
                 sm.input_vertices, sm.remote_vertices, sm.edges,
-                tr.book.sizes, spec)
+                tr.book.sizes, spec,
+                remote_miss_vertices=sm.remote_misses,
+                cached_vertices=tr.store.cache_sizes)
             print(f"[gnn] epoch {epoch:3d} loss {np.mean(losses):.4f} "
                   f"remote/step {np.mean(remotes):.0f} "
+                  f"hit_rate {np.mean(hit_rates):.2f} "
                   f"cluster step est {est.step_time*1e3:.1f} ms "
                   f"({time.perf_counter()-t1:.2f}s)")
 

@@ -1,6 +1,7 @@
 """Distribution-layer tests that need >1 device: run in a subprocess with
 placeholder host devices so the main test process keeps 1 device."""
 
+import importlib.util
 import json
 import subprocess
 import sys
@@ -8,12 +9,23 @@ import textwrap
 
 import pytest
 
+# The LM distribution layer (repro.dist: step builders, sharding policies,
+# analytic costs) is not part of every build of this repo; the GNN study
+# stands alone without it. Gate rather than fail.
+requires_dist = pytest.mark.skipif(
+    importlib.util.find_spec("repro.dist") is None,
+    reason="repro.dist (LM distribution layer) not present in this build",
+)
+
 
 def _run(code: str, devices: int = 8) -> str:
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=900,
         env={"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+             # pin the backend: without it jax burns minutes probing for
+             # TPU/GPU plugins before falling back to CPU
+             "JAX_PLATFORMS": "cpu",
              "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
         cwd="/root/repo",
     )
@@ -21,6 +33,7 @@ def _run(code: str, devices: int = 8) -> str:
     return proc.stdout
 
 
+@requires_dist
 def test_small_mesh_lowering_all_kinds():
     """train/prefill/decode cells lower+compile on a small (2,4) mesh for a
     smoke config — the same machinery the 512-device dry-run uses."""
@@ -85,6 +98,7 @@ def test_gnn_fullbatch_shard_map_multidevice():
     assert "maxerr" in out
 
 
+@requires_dist  # launch.dryrun imports the repro.dist cost/step builders
 def test_dryrun_collective_parser():
     from repro.launch.dryrun import collective_bytes_from_hlo
 

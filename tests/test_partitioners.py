@@ -11,7 +11,7 @@ System invariants per DESIGN.md §3:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
 from repro.core.graph import generate_graph, paper_graph

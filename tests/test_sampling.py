@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import generate_graph
 from repro.core.vertex_partition import partition_vertices
@@ -49,6 +49,25 @@ def test_remote_vertex_accounting(or_graph):
     expect_remote = int((owner[ids] != 1).sum())
     assert batch.num_remote == expect_remote
     assert batch.num_input == ids.shape[0]
+
+
+def test_num_remote_matches_partition_book(or_graph):
+    """Brute-force cross-check: SampledBatch.num_remote == the count of
+    input vertices whose partition-book owner is another worker."""
+    from repro.core.partition_book import build_vertex_book
+
+    a = partition_vertices(or_graph, 4, "ldg", seed=2)
+    book = build_vertex_book(or_graph, a, 4)
+    for w in range(4):
+        pool = np.where(book.owner == w)[0][:16]
+        if pool.size == 0:
+            continue
+        _, batch = _sample(or_graph, pool, (5, 5), seed=w,
+                           owner=book.owner, worker=w)
+        ids = batch.input_ids[batch.input_mask]
+        assert batch.num_remote == int((book.owner[ids] != w).sum())
+        # seeds are owned by this worker, so remote < input
+        assert batch.num_remote < batch.num_input
 
 
 def test_better_partition_fewer_remote(or_graph):

@@ -1,6 +1,7 @@
 """Substrate: optimizer, checkpointing, elastic restore, compression,
 minibatch straggler mitigation, study harness sanity."""
 
+import importlib.util
 import os
 
 import numpy as np
@@ -63,6 +64,10 @@ def test_checkpoint_ignores_partial(tmp_path):
     np.testing.assert_allclose(np.asarray(restored["w"]), 1.0)
 
 
+@pytest.mark.skipif(
+    importlib.util.find_spec("repro.dist") is None,
+    reason="repro.dist (LM distribution layer) not present in this build",
+)
 def test_train_resume_deterministic(tmp_path):
     """Crash/restart must land on the same trajectory: train 10 steps
     straight vs train 6, 'crash', resume to 10."""
