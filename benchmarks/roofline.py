@@ -1,21 +1,110 @@
 """Assignment §Roofline: three-term roofline per (arch x shape) on the
-single-pod 16x16 mesh, read from the dry-run cache (dryrun_results.json).
-
-Prints, per cell: compute/memory/collective seconds (analytic model,
-repro.dist.costs), the dominant term, MODEL_FLOPS=6ND (or 2ND), the
-useful-flops ratio, peak bytes/device from the compiled memory analysis,
-plus the HLO-derived terms as the compiled cross-check.
+single-pod 16x16 mesh, read from the dry-run cache (dryrun_results.json) —
+plus the GNN aggregation-backend bench: measured scatter-vs-tiled step time
+and aggregate traffic bytes for the full-batch (sage/gcn, k in {1, 4}) and
+mini-batch (sage) trainers. `--smoke` (or `run.py --smoke`) runs the
+aggregation bench at the trimmed CI scale; the dry-run section still needs
+the cache.
 """
 
 import json
 import os
+import sys
+import time
+
+import numpy as np
 
 from benchmarks.common import emit
+
+# the agg bench sizes itself independently of common.SCALE so a direct
+# `python benchmarks/roofline.py --smoke` is CI-fast without env setup
+AGG_SCALE = float(os.environ.get("BENCH_SCALE", "0.02"))
 
 RESULTS = os.environ.get("DRYRUN_RESULTS", "/root/repo/dryrun_results.json")
 
 
+def _agg_traffic_bytes(book, spec, backend) -> str:
+    """Analytic per-step aggregate traffic (all partitions, fwd only):
+    message bytes streamed through the aggregation. The scatter backend
+    reads/writes the raw symmetrised edge list; the tiled backend streams
+    the blocked layout (real edges + tile padding; its book carries the
+    layout — the scatter book is built without one)."""
+    d = spec.hidden_dim
+    e2 = 2 * int(book.emask.sum())          # real symmetrised edges
+    if backend == "scatter":
+        return f"agg_bytes={spec.num_layers * 2 * e2 * d * 4}"
+    e_tiled = int(np.prod(book.agg_order.shape))
+    return (f"agg_bytes={spec.num_layers * 2 * e_tiled * d * 4};"
+            f"tiled_pad_frac={1.0 - e2 / max(e_tiled, 1):.3f}")
+
+
+def _time_steps(step_fn, reps: int = 3) -> float:
+    step_fn()  # compile + warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        step_fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def agg_backend_bench() -> None:
+    """Measured scatter-vs-tiled step time (the tentpole's proof row)."""
+    import dataclasses
+
+    from repro.core.edge_partition import partition_edges
+    from repro.core.graph import paper_graph
+    from repro.core.vertex_partition import partition_vertices
+    from repro.gnn.fullbatch import FullBatchTrainer
+    from repro.gnn.minibatch import MiniBatchTrainer
+    from repro.gnn.models import GNNSpec
+
+    g = paper_graph("OR", scale=AGG_SCALE, seed=0)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_vertices, 32)).astype(np.float32)
+    labels = rng.integers(0, 8, g.num_vertices).astype(np.int32)
+    train = rng.random(g.num_vertices) < 0.3
+
+    for model in ("sage", "gcn"):
+        spec = GNNSpec(model=model, feature_dim=32, hidden_dim=32,
+                       num_classes=8, num_layers=2)
+        for k in (1, 4):
+            asg = (np.zeros(g.num_edges, np.int32) if k == 1
+                   else partition_edges(g, k, "hep100", seed=0))
+            times = {}
+            for backend in ("scatter", "tiled"):
+                tr = FullBatchTrainer.build(
+                    g, asg, k, dataclasses.replace(spec, agg_backend=backend),
+                    feats, labels, train, seed=0)
+                times[backend] = _time_steps(tr.train_step)
+                emit(f"roofline.agg.fullbatch.{model}.k{k}.{backend}",
+                     times[backend],
+                     f"{_agg_traffic_bytes(tr.book, spec, backend)};"
+                     f"edges={g.num_edges}")
+            emit(f"roofline.agg.fullbatch.{model}.k{k}.speedup", 0.0,
+                 f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
+
+    spec = GNNSpec(model="sage", feature_dim=32, hidden_dim=32,
+                   num_classes=8, num_layers=2)
+    owner = partition_vertices(g, 4, "metis", seed=0)
+    times = {}
+    for backend in ("scatter", "tiled"):
+        tr = MiniBatchTrainer.build(
+            g, owner, 4, dataclasses.replace(spec, agg_backend=backend),
+            feats, labels, train, global_batch=256, seed=0)
+        tr.train_step()  # compile
+        metrics = [tr.train_step() for _ in range(3)]
+        times[backend] = min(m.compute_time_host for m in metrics)
+        emit(f"roofline.agg.minibatch.sage.k4.{backend}", times[backend],
+             f"edges_per_step={int(metrics[-1].edges.sum())}")
+    emit("roofline.agg.minibatch.sage.k4.speedup", 0.0,
+         f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
+
+
 def main() -> None:
+    smoke = "--smoke" in sys.argv or os.environ.get("BENCH_FAST") == "1"
+    if smoke:
+        agg_backend_bench()
     if not os.path.exists(RESULTS):
         emit("roofline.missing", 0.0,
              "run `python -m repro.launch.dryrun --all --both-meshes` first")

@@ -191,7 +191,6 @@ def _neighborhood_expansion(
     eligible_edge: np.ndarray,
     capacity: int,
     k: int,
-    rng: np.random.Generator,
 ) -> np.ndarray:
     """NE/NE++ core: grow partitions one at a time, repeatedly absorbing the
     boundary vertex with the fewest *unassigned external* neighbors, so cut
@@ -213,14 +212,12 @@ def _neighborhood_expansion(
     for p in range(k):
         size = 0
         heap: list[tuple[int, int]] = []  # (ext_estimate, vertex)
-        in_boundary = np.zeros(graph.num_vertices, dtype=bool)
 
         def push_seed() -> bool:
             for s in seed_order:  # noqa: B023 — same iterator across partitions
                 s = int(s)
                 if not vert_done[s] and free_deg[s] > 0:
                     heapq.heappush(heap, (int(free_deg[s]), s))
-                    in_boundary[s] = True
                     return True
             return False
 
@@ -252,7 +249,6 @@ def _neighborhood_expansion(
                     y = int(y)
                     if not vert_done[y] and free_deg[y] > 0:
                         heapq.heappush(heap, (int(free_deg[y]), y))
-                        in_boundary[y] = True
     return assigned
 
 
@@ -273,6 +269,51 @@ def _csr_with_eids(graph: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     return out
 
 
+def _hdrf_stream(
+    graph: Graph,
+    assigned: np.ndarray,
+    k: int,
+    capacity: int,
+    rng: np.random.Generator,
+    deg: np.ndarray,
+) -> None:
+    """HEP's second phase: stream the still-unassigned edges HDRF-style
+    (greedy replica/balance score), respecting `capacity`. In-place.
+
+    When every partition is at capacity the capacity-gated score is all
+    -inf — `argmax` would then silently dump the edge on partition 0, so we
+    fall back to the least-loaded partition instead (capacity is a soft
+    balance target, not a hard invariant, once the graph overflows it).
+    """
+    rest = np.where(assigned < 0)[0]
+    if not rest.shape[0]:
+        return
+    replicas = np.zeros((graph.num_vertices, k), dtype=bool)
+    done = assigned >= 0
+    np.logical_or.at(replicas, (graph.src[done], assigned[done]), True)
+    np.logical_or.at(replicas, (graph.dst[done], assigned[done]), True)
+    sizes = np.bincount(assigned[done], minlength=k).astype(np.int64)
+    order = rng.permutation(rest)
+    src, dst = graph.src, graph.dst
+    for e in order:
+        u, v = int(src[e]), int(dst[e])
+        du, dv = int(deg[u]), int(deg[v])
+        theta_u = du / max(du + dv, 1)
+        g = replicas[u] * (2.0 - theta_u) + replicas[v] * (1.0 + theta_u)
+        has_room = sizes < capacity
+        if has_room.any():
+            maxs, mins = sizes.max(), sizes.min()
+            bal = (maxs - sizes) / (1.0 + maxs - mins)
+            score = np.where(has_room, g + bal, -np.inf)
+            p = int(np.argmax(score))
+        else:
+            p = int(np.argmin(sizes))
+        assigned[e] = p
+        sizes[p] += 1
+        replicas[u, p] = True
+        replicas[v, p] = True
+
+
 def _hep(graph: Graph, k: int, seed: int, tau: float) -> np.ndarray:
     rng = np.random.default_rng(seed)
     deg = graph.degrees()
@@ -283,32 +324,8 @@ def _hep(graph: Graph, k: int, seed: int, tau: float) -> np.ndarray:
     in_memory = ~streamed
     capacity = int(np.ceil(1.02 * graph.num_edges / k))
 
-    assigned = _neighborhood_expansion(graph, in_memory, capacity, k, rng)
-
-    # Stream the rest HDRF-style (greedy replica/balance score), respecting
-    # capacity — this is HEP's second phase.
-    rest = np.where(assigned < 0)[0]
-    if rest.shape[0]:
-        replicas = np.zeros((graph.num_vertices, k), dtype=bool)
-        done = assigned >= 0
-        np.logical_or.at(replicas, (graph.src[done], assigned[done]), True)
-        np.logical_or.at(replicas, (graph.dst[done], assigned[done]), True)
-        sizes = np.bincount(assigned[done], minlength=k).astype(np.int64)
-        order = rng.permutation(rest)
-        src, dst = graph.src, graph.dst
-        for e in order:
-            u, v = int(src[e]), int(dst[e])
-            du, dv = int(deg[u]), int(deg[v])
-            theta_u = du / max(du + dv, 1)
-            g = replicas[u] * (2.0 - theta_u) + replicas[v] * (1.0 + theta_u)
-            maxs, mins = sizes.max(), sizes.min()
-            bal = (maxs - sizes) / (1.0 + maxs - mins)
-            score = np.where(sizes < capacity, g + bal, -np.inf)
-            p = int(np.argmax(score))
-            assigned[e] = p
-            sizes[p] += 1
-            replicas[u, p] = True
-            replicas[v, p] = True
+    assigned = _neighborhood_expansion(graph, in_memory, capacity, k)
+    _hdrf_stream(graph, assigned, k, capacity, rng, deg)
     return assigned.astype(np.int32)
 
 

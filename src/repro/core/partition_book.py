@@ -34,6 +34,11 @@ import dataclasses
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.kernels.tiling import (
+    prepare_tiled_edges,
+    tiled_need_per_tile,
+    tiled_shape,
+)
 
 __all__ = ["EdgePartitionBook", "VertexPartitionBook", "build_edge_book", "build_vertex_book"]
 
@@ -70,6 +75,18 @@ class EdgePartitionBook:
 
     replicas_total: int  # sum over pairs of true replica-list lengths
 
+    # tiled aggregation layout (kernels.tiling.prepare_tiled_edges, built
+    # with the DEFAULT_TILE_V/DEFAULT_BLOCK_E tiling `ops.aggregate` expects)
+    # over the SYMMETRISED edge list — dst sequence [edst | esrc], one layout
+    # per partition, padded to a uniform per-tile edge count so the stacked
+    # [k, ...] arrays share one static shape. Masked (padding) edges are
+    # dropped: their messages are identically zero. Empty [k, 0] unless the
+    # book was built with tiled_layout=True.
+    # [k, E_tiled] gather indices into the 2*e_max message list (pad -> 2*e_max)
+    agg_order: np.ndarray
+    # [k, E_tiled] row id within the edge's row tile (pad -> DEFAULT_TILE_V)
+    agg_ldst: np.ndarray
+
     def padding_waste(self) -> float:
         """Fraction of all_to_all payload that is padding (0 = perfect)."""
         payload = self.k * self.k * self.bucket
@@ -101,7 +118,17 @@ class EdgePartitionBook:
         return out
 
 
-def build_edge_book(graph: Graph, edge_assignment: np.ndarray, k: int) -> EdgePartitionBook:
+def build_edge_book(
+    graph: Graph,
+    edge_assignment: np.ndarray,
+    k: int,
+    *,
+    tiled_layout: bool = False,
+) -> EdgePartitionBook:
+    """`tiled_layout` additionally builds the per-partition tiled aggregation
+    layout (agg_order/agg_ldst) — only the tiled/pallas backends read it, so
+    the default scatter path skips the host sort and the device residency
+    (the fields are then empty [k, 0] arrays)."""
     assignment = np.asarray(edge_assignment, dtype=np.int64)
     V = graph.num_vertices
     src = graph.src.astype(np.int64)
@@ -196,6 +223,28 @@ def build_edge_book(graph: Graph, edge_assignment: np.ndarray, k: int) -> EdgePa
     recv_idx[sj, si, within] = m_local_recv[order2]
     recv_mask[sj, si, within] = True
 
+    # --- tiled aggregation layout (one per partition, uniform shape) --------
+    # The device aggregates over the symmetrised edge list: messages are
+    # [values_src | values_dst] with destinations [edst | esrc]. Masked edges
+    # carry zero messages and are dropped from the layout.
+    if tiled_layout:
+        dst2 = np.concatenate([edst, esrc], axis=1)
+        valid2 = np.concatenate([emask, emask], axis=1)
+        _, n_tiles = tiled_shape(v_max + 1)
+        per_tile = max(
+            tiled_need_per_tile(dst2[p], v_max + 1, valid=valid2[p])
+            for p in range(k)
+        )
+        agg_order = np.empty((k, per_tile * n_tiles), dtype=np.int64)
+        agg_ldst = np.empty((k, per_tile * n_tiles), dtype=np.int32)
+        for p in range(k):
+            agg_order[p], agg_ldst[p], _ = prepare_tiled_edges(
+                dst2[p], v_max + 1, per_tile=per_tile, valid=valid2[p],
+            )
+    else:
+        agg_order = np.zeros((k, 0), dtype=np.int64)
+        agg_ldst = np.zeros((k, 0), dtype=np.int32)
+
     return EdgePartitionBook(
         k=k,
         num_vertices=V,
@@ -214,6 +263,8 @@ def build_edge_book(graph: Graph, edge_assignment: np.ndarray, k: int) -> EdgePa
         recv_idx=recv_idx.astype(np.int32),
         recv_mask=recv_mask,
         replicas_total=int(mirror_pairs.sum()),
+        agg_order=agg_order.astype(np.int32),
+        agg_ldst=agg_ldst,
     )
 
 

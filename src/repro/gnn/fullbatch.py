@@ -68,7 +68,10 @@ class FullBatchTrainer:
         seed: int = 0,
         lr: float = 1e-2,
     ) -> "FullBatchTrainer":
-        book = build_edge_book(graph, edge_assignment, k)
+        book = build_edge_book(
+            graph, edge_assignment, k,
+            tiled_layout=(spec.agg_backend != "scatter"),
+        )
         blocks = build_blocks(book, features, labels, train_mask)
         params = models.init_params(spec, seed=seed)
         return cls(

@@ -22,6 +22,14 @@ model prices the fetch phase from misses; sampling still pays remote
 adjacency costs for ALL remote vertices because the cache holds features,
 not adjacency.
 
+Aggregation backend (`GNNSpec.agg_backend` in {scatter, tiled, pallas}): the
+forward pass aggregates each MFG layer through `kernels.ops.aggregate`. For
+the tiled/pallas backends the host sampler attaches a per-layer tiled edge
+layout (`SampledLayer.agg_order`/`agg_ldst`, sized by the static pad plan via
+`LayerPad.tiled_plan`) so the device step — compiled once — runs the
+pre-sorted segment-SpMM instead of a data-dependent scatter; its backward is
+a plain gather (custom_vjp in ops.py), so gradients match the scatter oracle.
+
 On this container the k workers are simulated with `jax.vmap(axis_name=...)`
 over stacked per-worker batches — identical collective semantics to the
 multi-worker `shard_map` deployment. Per-phase times for the paper's cluster
@@ -48,6 +56,7 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook, build_vertex_book
 from repro.gnn.feature_store import FeatureStore, FetchStats
+from repro.kernels import ops
 from repro.gnn.models import GNNSpec, init_params
 from repro.gnn.sampling import (
     PAPER_FANOUTS,
@@ -61,32 +70,46 @@ AXIS = "workers"
 
 # ---------------------------------------------------------------------------
 # Device-side mini-batch model (directed MFG layers + self connection).
-# `lay` = dict(esrc, edst, emask, deg); n_dst is static (from the pad plan).
-# Scatter targets are sized n_dst+1; index n_dst is the padding sink.
+# `lay` = dict(esrc, edst, emask, deg, agg_order, agg_ldst); n_dst is static
+# (from the pad plan). Aggregation targets are sized n_dst+1; index n_dst is
+# the padding sink. Sum-aggregations go through `ops.aggregate` (`backend` in
+# {scatter, tiled, pallas}); the tiled layout is per-layer, per-batch, shaped
+# by the static pad plan (LayerPad.tiled_plan), so the device step still
+# compiles once. GAT's per-destination max stays an `at[].max` scatter.
 # ---------------------------------------------------------------------------
 
 
-def _mb_sage_layer(p, h_src, lay, n_dst: int, *, final: bool):
-    agg = jnp.zeros((n_dst + 1, h_src.shape[-1]), h_src.dtype)
+def _mb_aggregate(messages, lay, n_dst: int, backend: str):
+    """Sum per-edge messages into the [n_dst+1, d] destination rows."""
+    return ops.aggregate(
+        messages, lay["edst"], n_dst + 1,
+        edge_order=lay.get("agg_order"), local_dst=lay.get("agg_ldst"),
+        backend=backend,
+    )
+
+
+def _mb_sage_layer(p, h_src, lay, n_dst: int, *, final: bool,
+                   backend: str = "scatter"):
     msg = h_src[lay["esrc"]] * lay["emask"][:, None]
-    agg = agg.at[lay["edst"]].add(msg)
+    agg = _mb_aggregate(msg, lay, n_dst, backend)
     mean = agg[:-1] / jnp.maximum(lay["deg"][:-1], 1.0)[:, None]
     h_self = h_src[:n_dst]
     out = h_self @ p["w_self"] + mean @ p["w_neigh"] + p["b"]
     return out if final else jax.nn.relu(out)
 
 
-def _mb_gcn_layer(p, h_src, lay, n_dst: int, *, final: bool):
+def _mb_gcn_layer(p, h_src, lay, n_dst: int, *, final: bool,
+                  backend: str = "scatter"):
     deg_dst = lay["deg"][:-1] + 1.0
-    agg = jnp.zeros((n_dst + 1, h_src.shape[-1]), h_src.dtype)
     msg = h_src[lay["esrc"]] * lay["emask"][:, None]
-    agg = agg.at[lay["edst"]].add(msg)
+    agg = _mb_aggregate(msg, lay, n_dst, backend)
     h = (agg[:-1] + h_src[:n_dst]) / deg_dst[:, None]
     out = h @ p["w"] + p["b"]
     return out if final else jax.nn.relu(out)
 
 
-def _mb_gat_layer(p, h_src, lay, n_dst: int, *, final: bool):
+def _mb_gat_layer(p, h_src, lay, n_dst: int, *, final: bool,
+                  backend: str = "scatter"):
     heads, dh = p["a_src"].shape
     z = (h_src @ p["w"]).reshape(h_src.shape[0], heads, dh)
     s_src = jnp.einsum("nhd,hd->nh", z, p["a_src"])
@@ -103,10 +126,12 @@ def _mb_gat_layer(p, h_src, lay, n_dst: int, *, final: bool):
     m_pad = jnp.pad(m, ((0, 1), (0, 0)))
     w = jnp.exp(e - m_pad[lay["edst"]]) * lay["emask"][:, None]
     w_self = jnp.exp(e_self - m)
-    den = jnp.zeros((n_dst + 1, heads), h_src.dtype).at[lay["edst"]].add(w)
+    den = _mb_aggregate(w, lay, n_dst, backend)
     den = den[:-1] + w_self
-    num = jnp.zeros((n_dst + 1, heads, dh), h_src.dtype)
-    num = num.at[lay["edst"]].add(w[:, :, None] * z[lay["esrc"]])
+    num = _mb_aggregate(
+        (w[:, :, None] * z[lay["esrc"]]).reshape(-1, heads * dh),
+        lay, n_dst, backend,
+    ).reshape(n_dst + 1, heads, dh)
     num = num[:-1] + w_self[:, :, None] * z[:n_dst]
     out = (num / jnp.maximum(den, 1e-16)[:, :, None]).reshape(n_dst, heads * dh)
     out = (out + p["b"]) @ p["w_out"]
@@ -123,7 +148,8 @@ def minibatch_loss(spec: GNNSpec, params, batch, layer_sizes: Sequence[int],
     layer_fn = _MB_LAYERS[spec.model]
     L = len(params["layers"])
     for li, p in enumerate(params["layers"]):
-        h = layer_fn(p, h, batch["layers"][li], layer_sizes[li], final=(li == L - 1))
+        h = layer_fn(p, h, batch["layers"][li], layer_sizes[li],
+                     final=(li == L - 1), backend=spec.agg_backend)
     logits = h[: batch["seed_labels"].shape[0]]
     logp = jax.nn.log_softmax(logits, axis=-1)
     labels = jnp.maximum(batch["seed_labels"], 0)
@@ -154,9 +180,17 @@ class StepMetrics:
 
     @property
     def hit_rate(self) -> float:
-        """Cache hits / remote feature requests, whole step (1.0 if none)."""
+        """Cache hits / remote feature requests, whole step.
+
+        1.0 when the step needed no remote vertices (nothing to miss);
+        0.0 when hit accounting is absent (`cache_hits=None`, i.e. no
+        feature store was consulted) but remote vertices exist."""
         remote = float(self.remote_vertices.sum())
-        return float(self.cache_hits.sum()) / remote if remote else 1.0
+        if not remote:
+            return 1.0
+        if self.cache_hits is None:
+            return 0.0
+        return float(self.cache_hits.sum()) / remote
 
 
 @dataclasses.dataclass
@@ -265,7 +299,17 @@ class MiniBatchTrainer:
                 for li in range(len(self.fanouts))
             ],
         }
+        if self._tiled_layout:  # only stacked/transferred when a backend reads it
+            for li, lay in enumerate(stacked["layers"]):
+                lay["agg_order"] = jnp.asarray(
+                    np.stack([b.layers[li].agg_order for b in batches]))
+                lay["agg_ldst"] = jnp.asarray(
+                    np.stack([b.layers[li].agg_ldst for b in batches]))
         return stacked, fetch
+
+    @property
+    def _tiled_layout(self) -> bool:
+        return self.spec.agg_backend != "scatter"
 
     @property
     def _layer_sizes(self) -> list:
@@ -301,6 +345,7 @@ class MiniBatchTrainer:
             sample_blocks(
                 self.graph, s, self.fanouts, self.plan, self.rng,
                 self.labels, owner=self.book.owner, worker=w,
+                tiled_layout=self._tiled_layout,
             )
             for w, s in enumerate(seeds)
         ]

@@ -18,6 +18,18 @@ produces messages u->v and v->u (DGL-on-undirected semantics, which both
 DistGNN and the paper's DistDGL setup use).
 
 Models follow the paper's setup (§4.1/§5.1): GraphSAGE (mean), GCN, GAT.
+
+Aggregation backend (`GNNSpec.agg_backend`): every sum-aggregation goes
+through `kernels.ops.aggregate`, which dispatches on the knob —
+  scatter — data-dependent `at[].add` (the oracle)
+  tiled   — pre-sorted/pre-blocked layout (`Block.agg_order`/`agg_ldst`,
+            built by the partition book) through the tiled segment-SpMM:
+            jnp oracle off-TPU, the Pallas one-hot-matmul kernel on TPU.
+            Backward is a plain gather (custom_vjp), so gradients match the
+            scatter oracle to allclose.
+  pallas  — like tiled but forces the Pallas kernel (interpreted on CPU).
+GAT's per-destination max (softmax stabilisation) still uses `at[].max`
+(see ROADMAP: GAT max/softmax tiling).
 """
 
 from __future__ import annotations
@@ -28,6 +40,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
 
 Params = Any
 
@@ -40,6 +54,7 @@ class GNNSpec:
     num_classes: int = 16
     num_layers: int = 2
     gat_heads: int = 4
+    agg_backend: str = "scatter"  # scatter | tiled | pallas (ops.aggregate)
 
     def dims(self) -> list[tuple[int, int]]:
         ins = [self.feature_dim] + [self.hidden_dim] * (self.num_layers - 1)
@@ -89,24 +104,32 @@ def init_params(spec: GNNSpec, seed: int = 0) -> Params:
 # ---------------------------------------------------------------------------
 
 
-def _scatter_sum_bidir(values_src, values_dst, esrc, edst, num_rows):
+def _scatter_sum_bidir(values_src, values_dst, blk, num_rows,
+                       backend: str = "scatter"):
     """Sum messages over the symmetrised edge list into vertex rows.
 
     values_src: [E, d] message carried by the edge toward `edst`
     values_dst: [E, d] message toward `esrc` (reverse direction)
     Padding edges point at the dummy row (num_rows-1) and carry zeros.
+
+    Dispatches to `ops.aggregate`: the symmetrised list is the concatenation
+    [values_src -> edst | values_dst -> esrc], whose tiled layout the
+    partition book precomputed into `blk.agg_order`/`blk.agg_ldst`.
     """
-    out = jnp.zeros((num_rows, values_src.shape[-1]), values_src.dtype)
-    out = out.at[edst].add(values_src)
-    out = out.at[esrc].add(values_dst)
-    return out
+    messages = jnp.concatenate([values_src, values_dst], axis=0)
+    dst = jnp.concatenate([blk.edst, blk.esrc], axis=0)
+    return ops.aggregate(
+        messages, dst, num_rows,
+        edge_order=blk.agg_order, local_dst=blk.agg_ldst, backend=backend,
+    )
 
 
-def sage_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+def sage_layer(p, x, blk, sync, *, final: bool,
+               backend: str = "scatter") -> jnp.ndarray:
     n = x.shape[0]
     msg = x[blk.esrc] * blk.emask[:, None]
     msg_rev = x[blk.edst] * blk.emask[:, None]
-    agg = _scatter_sum_bidir(msg, msg_rev, blk.esrc, blk.edst, n)
+    agg = _scatter_sum_bidir(msg, msg_rev, blk, n, backend)
     agg = sync.reduce_sum(agg)          # mirrors' partials -> masters
     agg = sync.broadcast(agg)           # masters' totals  -> mirrors
     mean = agg / jnp.maximum(blk.degree, 1.0)[:, None]
@@ -114,12 +137,13 @@ def sage_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
     return h if final else jax.nn.relu(h)
 
 
-def gcn_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+def gcn_layer(p, x, blk, sync, *, final: bool,
+              backend: str = "scatter") -> jnp.ndarray:
     n = x.shape[0]
     dnorm = 1.0 / jnp.sqrt(blk.degree + 1.0)  # self-loop-augmented degree
     msg = (x * dnorm[:, None])[blk.esrc] * blk.emask[:, None]
     msg_rev = (x * dnorm[:, None])[blk.edst] * blk.emask[:, None]
-    agg = _scatter_sum_bidir(msg, msg_rev, blk.esrc, blk.edst, n)
+    agg = _scatter_sum_bidir(msg, msg_rev, blk, n, backend)
     # Self-loop term once per vertex: gate by master so replicas don't
     # double-count it in the cross-partition reduction.
     self_term = x * (dnorm * dnorm)[:, None] * blk.master[:, None]
@@ -130,7 +154,8 @@ def gcn_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
     return h if final else jax.nn.relu(h)
 
 
-def gat_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
+def gat_layer(p, x, blk, sync, *, final: bool,
+              backend: str = "scatter") -> jnp.ndarray:
     n = x.shape[0]
     h_heads, dh = p["a_src"].shape
     z = (x @ p["w"]).reshape(n, h_heads, dh)
@@ -161,18 +186,18 @@ def gat_layer(p, x, blk, sync, *, final: bool) -> jnp.ndarray:
     w_fwd = jnp.exp(e_fwd - m_safe[blk.edst]) * blk.emask[:, None]
     w_rev = jnp.exp(e_rev - m_safe[blk.esrc]) * blk.emask[:, None]
     w_self = jnp.exp(e_self - m_safe) * blk.master[:, None]
-    den = jnp.zeros((n, h_heads), x.dtype)
-    den = den.at[blk.edst].add(w_fwd)
-    den = den.at[blk.esrc].add(w_rev)
+    den = _scatter_sum_bidir(w_fwd, w_rev, blk, n, backend)
     den = den + w_self
     den = sync.reduce_sum(den)
     den = sync.broadcast(den)
     den = jnp.maximum(den, 1e-16)
 
     # 3) attention-weighted aggregate
-    num = jnp.zeros((n, h_heads, dh), x.dtype)
-    num = num.at[blk.edst].add(w_fwd[:, :, None] * z[blk.esrc])
-    num = num.at[blk.esrc].add(w_rev[:, :, None] * z[blk.edst])
+    num = _scatter_sum_bidir(
+        (w_fwd[:, :, None] * z[blk.esrc]).reshape(-1, h_heads * dh),
+        (w_rev[:, :, None] * z[blk.edst]).reshape(-1, h_heads * dh),
+        blk, n, backend,
+    ).reshape(n, h_heads, dh)
     num = num + w_self[:, :, None] * z
     num = sync.reduce_sum(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
     num = sync.broadcast(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
@@ -192,7 +217,8 @@ def forward(spec: GNNSpec, params: Params, x, blk, sync) -> jnp.ndarray:
     h = x
     n_layers = len(params["layers"])
     for li, p in enumerate(params["layers"]):
-        h = layer_fn(p, h, blk, sync, final=(li == n_layers - 1))
+        h = layer_fn(p, h, blk, sync, final=(li == n_layers - 1),
+                     backend=spec.agg_backend)
         # dummy row must stay zero: it is a scatter sink for padding
         h = h.at[-1].set(0.0)
     return h

@@ -21,6 +21,12 @@ from typing import NamedTuple, Optional, Sequence
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.kernels.tiling import (
+    DEFAULT_BLOCK_E,
+    DEFAULT_TILE_V,
+    prepare_tiled_edges,
+    tiled_shape,
+)
 
 # Paper §5.1: fanouts per number of layers.
 PAPER_FANOUTS = {2: (25, 20), 3: (15, 10, 5), 4: (10, 10, 5, 5)}
@@ -30,6 +36,18 @@ class LayerPad(NamedTuple):
     n_src: int
     n_dst: int
     n_edges: int
+
+    def tiled_plan(self, fanout: int,
+                   tile_v: int = DEFAULT_TILE_V,
+                   block_e: int = DEFAULT_BLOCK_E) -> tuple[int, int]:
+        """Static (n_tiles, per_tile) of this layer's tiled-aggregation
+        layout. A row tile holds <= tile_v destination rows, each with at
+        most `fanout` sampled in-edges, so per_tile is bounded without ever
+        looking at a concrete batch — the pad plan stays static."""
+        _, n_tiles = tiled_shape(self.n_dst + 1, tile_v)  # + padding sink row
+        cap = min(self.n_edges, tile_v * fanout)
+        per_tile = max(-(-cap // block_e), 1) * block_e
+        return n_tiles, per_tile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +81,11 @@ class SampledLayer(NamedTuple):
     emask: np.ndarray
     n_dst: np.ndarray  # scalar int32 (true dst count)
     sampled_deg: np.ndarray  # [n_dst_pad] float32: true #sampled in-neighbors
+    # tiled aggregation layout (kernels.tiling.prepare_tiled_edges over the
+    # real edges of this MFG layer; static shape = LayerPad.tiled_plan).
+    # None unless the sampler was asked for it (tiled/pallas backends only).
+    agg_order: Optional[np.ndarray] = None  # [E_tiled] int32 (pad -> n_edges)
+    agg_ldst: Optional[np.ndarray] = None   # [E_tiled] int32 (pad -> tile_v)
 
 
 class SampledBatch(NamedTuple):
@@ -118,8 +141,13 @@ def sample_blocks(
     labels: np.ndarray,
     owner: Optional[np.ndarray] = None,
     worker: int = 0,
+    tiled_layout: bool = False,
 ) -> SampledBatch:
-    """Sample a k-hop MFG stack for `seeds` (innermost hop first in output)."""
+    """Sample a k-hop MFG stack for `seeds` (innermost hop first in output).
+
+    `tiled_layout` additionally attaches the per-layer tiled aggregation
+    layout (agg_order/agg_ldst) — only the tiled/pallas backends read it, so
+    the default scatter path skips the extra host argsort per layer."""
     indptr, indices = graph.csr()
     fanouts = tuple(int(f) for f in fanouts)
 
@@ -164,10 +192,19 @@ def sample_blocks(
         emask[:n_e] = True
         deg = np.zeros(pad.n_dst + 1, dtype=np.float32)
         np.add.at(deg, dst_p, 1.0)
+        agg_order = agg_ldst = None
+        if tiled_layout:
+            _, per_tile = pad.tiled_plan(fanouts[i])
+            agg_order, agg_ldst, _ = prepare_tiled_edges(
+                edst, pad.n_dst + 1, per_tile=per_tile, valid=emask,
+            )
+            agg_order = agg_order.astype(np.int32)
         layers.append(
             SampledLayer(
                 esrc=esrc, edst=edst, emask=emask,
                 n_dst=np.int32(dst_count), sampled_deg=deg,
+                agg_order=agg_order,
+                agg_ldst=agg_ldst,
             )
         )
 

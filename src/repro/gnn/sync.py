@@ -8,9 +8,12 @@ partial aggregates that per-partition scatter-sums produce):
                O(V·d) per sync, *independent of partitioning quality*. This
                is the naive baseline the halo exchange is measured against.
   HaloSync   — static-routed all_to_all using the partition book's replica
-               lists. Volume per sync = 2·k·B·d (B = max pair bucket), which
-               tracks the replication factor — the paper's key mechanism,
-               expressed in XLA-compilable form (DESIGN.md §2).
+               lists. One reduce+broadcast pair moves 2·k·B·d elements per
+               device (B = max pair bucket) = 2·k²·B·d·4 bytes cluster-wide
+               (`sync_bytes_per_round`, pinned against the compiled HLO in
+               tests/test_dist_lowering.py). The volume tracks the
+               replication factor — the paper's key mechanism, expressed in
+               XLA-compilable form (DESIGN.md §2).
 
 All three work identically under `jax.vmap(axis_name=...)` (CPU simulation of
 k workers) and `jax.shard_map` (real meshes / the multi-pod dry-run), because
@@ -49,6 +52,10 @@ class Block(NamedTuple):
     recv_idx: jnp.ndarray    # [k, B] int32
     recv_mask: jnp.ndarray   # [k, B] bool
     vglobal: jnp.ndarray     # [Vloc+1] int32 (pad -> V, the global dummy row)
+    # tiled aggregation layout over the symmetrised edge list [edst | esrc]
+    # (kernels.ops.prepare_tiled_edges; used by the tiled/pallas backends)
+    agg_order: jnp.ndarray   # [E_tiled] int32 (pad -> 2*Eloc)
+    agg_ldst: jnp.ndarray    # [E_tiled] int32 (pad -> tile_v)
 
 
 def build_blocks(
@@ -81,6 +88,8 @@ def build_blocks(
         recv_idx=jnp.asarray(book.recv_idx),
         recv_mask=jnp.asarray(book.recv_mask),
         vglobal=jnp.asarray(vg.astype(np.int32)),
+        agg_order=jnp.asarray(book.agg_order),
+        agg_ldst=jnp.asarray(book.agg_ldst),
     )
 
 
@@ -192,6 +201,9 @@ def sync_bytes_per_round(book: EdgePartitionBook, d: int, mode: str) -> int:
     Used by the study harness and checked against the dry-run HLO.
     """
     if mode == "halo":
+        # each of k devices sends a [k, B, d] f32 buffer per all_to_all and a
+        # reduce+broadcast pair is 2 exchanges: 2·k²·B·d·4 bytes cluster-wide
+        # (= 2·k·B·d elements per device, as the HaloSync docstring states)
         return 2 * book.k * book.k * book.bucket * d * 4
     if mode == "dense":
         # psum of [V+1, d] on k devices (ring all-reduce ~ 2x payload)

@@ -13,15 +13,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
-from repro.kernels.segment_spmm import (
+from repro.kernels.segment_spmm import segment_spmm as _spmm_pallas
+from repro.kernels.tiling import (  # noqa: F401 (re-exported host-layout API)
     DEFAULT_BLOCK_E,
+    DEFAULT_TILE_F,
     DEFAULT_TILE_V,
-    segment_spmm as _spmm_pallas,
+    prepare_tiled_edges,
+    tiled_need_per_tile,
+    tiled_shape,
 )
 
 
@@ -34,69 +37,136 @@ def _on_tpu() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def prepare_tiled_edges(
-    dst: np.ndarray,
-    num_rows: int,
-    *,
-    tile_v: int = DEFAULT_TILE_V,
-    block_e: int = DEFAULT_BLOCK_E,
-) -> tuple[np.ndarray, np.ndarray, int]:
-    """Host-side layout pass (once per graph/partition): sort edges by row
-    tile and pad each tile's edge list to a multiple of block_e.
-
-    Returns (edge_order, local_dst, rows_padded):
-      edge_order [E_padded] — gather indices into the original edge list
-                              (padding -> E, caller appends a zero message row)
-      local_dst  [E_padded] — row id within the edge's tile (padding -> tile_v)
-    """
-    e = dst.shape[0]
-    rows_padded = int(np.ceil(max(num_rows, 1) / tile_v) * tile_v)
-    n_tiles = rows_padded // tile_v
-    tile_of = dst // tile_v
-    order = np.argsort(tile_of, kind="stable")
-    counts = np.bincount(tile_of, minlength=n_tiles)
-    padded_counts = np.maximum(np.ceil(counts / block_e).astype(int), 1) * block_e
-    total = int(padded_counts.sum())
-    # make every tile have the same number of edge blocks (grid uniformity)
-    per_tile = int(padded_counts.max())
-    total = per_tile * n_tiles
-    edge_order = np.full(total, e, dtype=np.int64)
-    local_dst = np.full(total, tile_v, dtype=np.int32)
-    starts = np.cumsum(counts) - counts
-    for t in range(n_tiles):
-        seg = order[starts[t]: starts[t] + counts[t]]
-        edge_order[t * per_tile: t * per_tile + counts[t]] = seg
-        local_dst[t * per_tile: t * per_tile + counts[t]] = (
-            dst[seg] - t * tile_v
-        ).astype(np.int32)
-    return edge_order, local_dst, rows_padded
+def _pick_tile_f(f: int) -> int:
+    """Lane tiling: the MXU-friendly 128 when it divides f, else f itself
+    (small feature dims; Pallas pads lanes internally)."""
+    return DEFAULT_TILE_F if f % DEFAULT_TILE_F == 0 else f
 
 
-@functools.partial(jax.jit, static_argnames=("num_rows", "use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "num_rows", "tile_v", "block_e", "use_pallas", "interpret"))
 def segment_spmm(
     messages: jnp.ndarray,
     local_dst: jnp.ndarray,
     num_rows: int,
     *,
+    tile_v: int = DEFAULT_TILE_V,
+    block_e: int = DEFAULT_BLOCK_E,
     use_pallas: bool | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Tiled segment-sum. `messages`/`local_dst` must come from
-    `prepare_tiled_edges` layout; non-TPU backends use the oracle."""
+    """Tiled segment-sum. `messages`/`local_dst` must come from a
+    `prepare_tiled_edges` layout built with the SAME (tile_v, block_e);
+    non-TPU backends use the oracle."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use or interpret:
         return _spmm_pallas(
-            messages, local_dst, num_rows, interpret=interpret or not _on_tpu()
+            messages, local_dst, num_rows,
+            block_e=block_e, tile_v=tile_v,
+            tile_f=_pick_tile_f(messages.shape[1]),
+            interpret=interpret or not _on_tpu(),
         )
     # oracle path: local_dst is tile-relative; rebuild global ids
     e = messages.shape[0]
-    n_tiles = max(num_rows // DEFAULT_TILE_V, 1)
+    n_tiles = max(num_rows // tile_v, 1)
     per_tile = e // n_tiles
     tile_idx = jnp.arange(e) // per_tile
     gdst = jnp.where(
-        local_dst >= DEFAULT_TILE_V, num_rows, tile_idx * DEFAULT_TILE_V + local_dst
+        local_dst >= tile_v, num_rows, tile_idx * tile_v + local_dst
     )
     return ref.segment_sum_ref(messages, gdst.astype(jnp.int32), num_rows)
+
+
+# ---------------------------------------------------------------------------
+# aggregate — the GNN aggregation primitive (scatter | tiled | pallas)
+# ---------------------------------------------------------------------------
+
+AGG_BACKENDS = ("scatter", "tiled", "pallas")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _tiled_aggregate(num_rows, tile_v, block_e, use_pallas, interpret,
+                     messages, dst, edge_order, local_dst):
+    """Tiled segment-sum of `messages` into `num_rows` rows.
+
+    Forward runs the pre-sorted / pre-blocked layout (gather by `edge_order`,
+    then the tiled kernel). Backward exploits that a segment-sum's transpose
+    is a plain gather: grad_messages = g[dst] — cheap and Pallas-free.
+    """
+    del dst  # forward uses the tiled layout only; dst feeds the backward
+    e, f = messages.shape
+    msg_pad = jnp.concatenate(
+        [messages, jnp.zeros((1, f), messages.dtype)], axis=0)
+    out = segment_spmm(
+        msg_pad[edge_order], local_dst, tiled_shape(num_rows, tile_v)[0],
+        tile_v=tile_v, block_e=block_e,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return out[:num_rows]
+
+
+def _tiled_aggregate_fwd(num_rows, tile_v, block_e, use_pallas, interpret,
+                         messages, dst, edge_order, local_dst):
+    out = _tiled_aggregate(num_rows, tile_v, block_e, use_pallas, interpret,
+                           messages, dst, edge_order, local_dst)
+    return out, dst
+
+
+def _tiled_aggregate_bwd(num_rows, tile_v, block_e, use_pallas, interpret,
+                         dst, g):
+    # transpose of the pre-sorted scatter-add: a gather (pad dst -> zero row)
+    g_pad = jnp.concatenate([g, jnp.zeros((1, g.shape[1]), g.dtype)], axis=0)
+    grad_messages = g_pad[jnp.minimum(dst, num_rows)]
+    return grad_messages, None, None, None
+
+
+_tiled_aggregate.defvjp(_tiled_aggregate_fwd, _tiled_aggregate_bwd)
+
+
+def aggregate(
+    messages: jnp.ndarray,    # [E, F] per-edge messages (original edge order)
+    dst: jnp.ndarray,         # [E] int32 destination row per edge (< num_rows)
+    num_rows: int,
+    *,
+    edge_order: jnp.ndarray | None = None,  # from prepare_tiled_edges
+    local_dst: jnp.ndarray | None = None,
+    backend: str = "scatter",
+    tile_v: int = DEFAULT_TILE_V,
+    block_e: int = DEFAULT_BLOCK_E,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Segment-sum `messages` into `[num_rows, F]` vertex rows.
+
+    backend:
+      scatter — data-dependent `at[].add` (the oracle; XLA scatter)
+      tiled   — `prepare_tiled_edges` layout through the tiled segment-sum
+                (jnp oracle off-TPU, Pallas kernel on TPU); custom_vjp gather
+                backward
+      pallas  — like tiled but forces the Pallas kernel (interpreted on CPU;
+                tests use this)
+
+    The tiled layout may drop edges whose messages are identically zero
+    (padding edges) — forward values and gradients still match the scatter
+    oracle, because a zero message contributes nothing and the backward
+    gather `g[dst]` is the same linear transpose either way.
+    """
+    if backend == "scatter":
+        out = jnp.zeros((num_rows + 1, messages.shape[-1]), messages.dtype)
+        return out.at[jnp.minimum(dst, num_rows)].add(messages)[:num_rows]
+    if backend not in AGG_BACKENDS:
+        raise ValueError(f"unknown aggregate backend {backend!r}; "
+                         f"options: {AGG_BACKENDS}")
+    assert edge_order is not None and local_dst is not None, (
+        "tiled/pallas backends need the prepare_tiled_edges layout")
+    if edge_order.shape[-1] == 0 and messages.shape[0] > 0:
+        raise ValueError(
+            "empty tiled layout: the partition book / sample plan was built "
+            "without tiled_layout=True but a tiled backend was requested")
+    use_pallas = None if backend == "tiled" else True
+    return _tiled_aggregate(
+        num_rows, tile_v, block_e, use_pallas, interpret,
+        messages, dst, edge_order, local_dst,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -26,9 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_E = 512
-DEFAULT_TILE_V = 256
-DEFAULT_TILE_F = 128
+from repro.kernels.tiling import (  # noqa: F401 (canonical tile constants)
+    DEFAULT_BLOCK_E,
+    DEFAULT_TILE_F,
+    DEFAULT_TILE_V,
+)
 
 
 def _segment_spmm_kernel(dst_ref, msg_ref, out_ref, *, block_e, tile_v):

@@ -43,6 +43,11 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--sync", default="halo", choices=["halo", "dense"])
+    ap.add_argument("--agg-backend", default="scatter",
+                    choices=["scatter", "tiled", "pallas"],
+                    help="aggregation backend (kernels.ops.aggregate): "
+                         "data-dependent scatter, tiled segment-SpMM layout, "
+                         "or the Pallas kernel (interpreted off-TPU)")
     ap.add_argument("--rebalance", action="store_true",
                     help="dynamic seed rebalancing (straggler mitigation)")
     ap.add_argument("--cache-policy", default="none",
@@ -62,7 +67,7 @@ def main() -> None:
     train_mask = rng.random(g.num_vertices) < 0.3
     spec = GNNSpec(model=args.model, feature_dim=args.features,
                    hidden_dim=args.hidden, num_classes=args.classes,
-                   num_layers=args.layers)
+                   num_layers=args.layers, agg_backend=args.agg_backend)
 
     t0 = time.perf_counter()
     if args.regime == "fullbatch":

@@ -170,3 +170,26 @@ def test_study_row_cache_columns():
     for r in rows.values():
         assert r["cache_hits"] + r["remote_misses"] == pytest.approx(
             r["remote_vertices"])
+
+
+def test_step_metrics_hit_rate_edge_cases():
+    """hit_rate: 1.0 when no remote vertices were needed; 0.0 when remote
+    vertices exist but hit accounting is absent (cache_hits=None default);
+    the ratio otherwise."""
+    from repro.gnn.minibatch import StepMetrics
+
+    def metrics(remote, hits):
+        return StepMetrics(
+            loss=0.0,
+            input_vertices=np.array([10, 10]),
+            remote_vertices=np.asarray(remote),
+            edges=np.array([5, 5]),
+            sample_time_host=0.0,
+            compute_time_host=0.0,
+            cache_hits=None if hits is None else np.asarray(hits),
+        )
+
+    assert metrics([0, 0], None).hit_rate == 1.0      # nothing remote at all
+    assert metrics([0, 0], [0, 0]).hit_rate == 1.0
+    assert metrics([4, 4], None).hit_rate == 0.0      # no store consulted
+    assert metrics([4, 4], [2, 0]).hit_rate == pytest.approx(0.25)

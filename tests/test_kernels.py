@@ -30,6 +30,79 @@ def test_segment_spmm_sweep(e, v, f, dtype):
     )
 
 
+@pytest.mark.parametrize("tile_v,block_e", [(128, 256), (64, 128), (512, 512)])
+def test_segment_spmm_nondefault_tiling(tile_v, block_e):
+    """The oracle path must reconstruct global dst ids with the SAME tiling
+    the layout was built with (regression: it hardcoded DEFAULT_TILE_V)."""
+    rng = np.random.default_rng(tile_v + block_e)
+    e, v, f = 900, 700, 32
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = rng.normal(size=(e, f)).astype(np.float32)
+    order, local_dst, rows_p = ops.prepare_tiled_edges(
+        dst, v, tile_v=tile_v, block_e=block_e)
+    msgs_pad = np.concatenate([msgs, np.zeros((1, f), np.float32)])[order]
+    expect = ref.segment_sum_ref(jnp.asarray(msgs), jnp.asarray(dst), v)
+    for kw in ({"use_pallas": False}, {"interpret": True}):
+        out = ops.segment_spmm(
+            jnp.asarray(msgs_pad), jnp.asarray(local_dst), rows_p,
+            tile_v=tile_v, block_e=block_e, **kw)
+        np.testing.assert_allclose(np.asarray(out[:v]), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("case", ["empty_tiles", "ragged_e", "tiny_rows"])
+def test_prepare_tiled_edges_ragged(case):
+    """Layout pass corner cases: row tiles with no edges, edge counts that
+    don't divide block_e, and fewer rows than one tile."""
+    rng = np.random.default_rng(0)
+    f = 16
+    if case == "empty_tiles":
+        v, e = 1024, 300
+        dst = rng.integers(0, 128, e).astype(np.int32)  # tiles 1..3 empty
+    elif case == "ragged_e":
+        v, e = 512, 515  # not a multiple of any block size
+        dst = rng.integers(0, v, e).astype(np.int32)
+    else:
+        v, e = 7, 40  # num_rows < tile_v
+        dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = rng.normal(size=(e, f)).astype(np.float32)
+    order, local_dst, rows_p = ops.prepare_tiled_edges(dst, v)
+    assert rows_p % ops.DEFAULT_TILE_V == 0 and rows_p >= v
+    assert order.shape == local_dst.shape
+    assert (local_dst <= ops.DEFAULT_TILE_V).all()
+    msgs_pad = np.concatenate([msgs, np.zeros((1, f), np.float32)])[order]
+    expect = ref.segment_sum_ref(jnp.asarray(msgs), jnp.asarray(dst), v)
+    for kw in ({"use_pallas": False}, {"interpret": True}):
+        out = ops.segment_spmm(
+            jnp.asarray(msgs_pad), jnp.asarray(local_dst), rows_p, **kw)
+        np.testing.assert_allclose(np.asarray(out[:v]), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_prepare_tiled_edges_valid_mask_and_per_tile():
+    """`valid` drops (zero-message) edges from the layout; `per_tile` forces
+    a shared static shape."""
+    rng = np.random.default_rng(3)
+    v, e = 300, 400
+    dst = rng.integers(0, v, e).astype(np.int32)
+    valid = rng.random(e) < 0.5
+    order, local_dst, rows_p = ops.prepare_tiled_edges(
+        dst, v, per_tile=1024, valid=valid)
+    n_tiles = rows_p // ops.DEFAULT_TILE_V
+    assert order.shape[0] == n_tiles * 1024
+    kept = order[order < e]
+    assert sorted(kept) == sorted(np.where(valid)[0])
+    msgs = rng.normal(size=(e, 8)).astype(np.float32)
+    msgs_pad = np.concatenate([msgs, np.zeros((1, 8), np.float32)])[order]
+    out = ops.segment_spmm(
+        jnp.asarray(msgs_pad), jnp.asarray(local_dst), rows_p,
+        use_pallas=False)
+    expect = ref.segment_sum_ref(
+        jnp.asarray(msgs * valid[:, None]), jnp.asarray(dst), v)
+    np.testing.assert_allclose(np.asarray(out[:v]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,h,sq,skv,d", [
     (1, 2, 256, 256, 64),

@@ -156,3 +156,29 @@ def test_partition_book_roundtrip(small_graphs):
     assert (book.edst[book.emask] < book.v_max).all()
     # padding waste is a fraction
     assert 0.0 <= book.padding_waste() <= 1.0
+
+
+def test_hep_stream_capacity_overflow_falls_back_to_least_loaded():
+    """When every partition is at capacity, the HDRF score is all -inf and
+    argmax would silently dump every remaining edge on partition 0; the
+    streaming phase must fall back to the least-loaded partition instead."""
+    from repro.core.edge_partition import _hdrf_stream
+
+    g = generate_graph("social", 60, 120, seed=0)
+    k = 4
+    assigned = np.full(g.num_edges, -1, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    # capacity=1 forces overflow almost immediately
+    _hdrf_stream(g, assigned, k, capacity=1, rng=rng, deg=g.degrees())
+    assert (assigned >= 0).all() and (assigned < k).all()
+    sizes = np.bincount(assigned, minlength=k)
+    # least-loaded fallback keeps the stream balanced, not piled on part 0
+    assert sizes.max() - sizes.min() <= 1, sizes
+
+
+def test_hep_full_assignment_small_capacity_graph():
+    """End-to-end: hep on a tiny graph with many partitions (capacity ~1)
+    still assigns every edge to a valid partition."""
+    g = generate_graph("social", 12, 14, seed=1)
+    a = partition_edges(g, 8, "hep10", seed=0)
+    assert (a >= 0).all() and (a < 8).all()
