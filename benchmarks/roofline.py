@@ -1,10 +1,11 @@
 """Assignment §Roofline: three-term roofline per (arch x shape) on the
 single-pod 16x16 mesh, read from the dry-run cache (dryrun_results.json) —
-plus the GNN aggregation-backend bench: measured scatter-vs-tiled step time
-and aggregate traffic bytes for the full-batch (sage/gcn, k in {1, 4}) and
-mini-batch (sage) trainers. `--smoke` (or `run.py --smoke`) runs the
-aggregation bench at the trimmed CI scale; the dry-run section still needs
-the cache.
+plus the GNN aggregation-backend bench: measured scatter-vs-tiled
+segment-reduce (sum AND max) microbench rows, and scatter-vs-tiled step time
++ aggregate traffic bytes for the full-batch (sage/gcn/gat, k in {1, 4}) and
+mini-batch (sage) trainers — gat exercises the segment-max path end to end.
+`--smoke` (or `run.py --smoke`) runs the aggregation bench at the trimmed CI
+scale; the dry-run section still needs the cache.
 """
 
 import json
@@ -28,13 +29,17 @@ def _agg_traffic_bytes(book, spec, backend) -> str:
     message bytes streamed through the aggregation. The scatter backend
     reads/writes the raw symmetrised edge list; the tiled backend streams
     the blocked layout (real edges + tile padding; its book carries the
-    layout — the scatter book is built without one)."""
-    d = spec.hidden_dim
+    layout — the scatter book is built without one). sage/gcn stream one
+    [E, hidden] sum per layer; gat streams two [E, heads] score reduces
+    (segment-max + den sum) plus the [E, hidden] num sum."""
+    width = spec.hidden_dim
+    if spec.model == "gat":
+        width += 2 * spec.gat_heads
     e2 = 2 * int(book.emask.sum())          # real symmetrised edges
     if backend == "scatter":
-        return f"agg_bytes={spec.num_layers * 2 * e2 * d * 4}"
+        return f"agg_bytes={spec.num_layers * 2 * e2 * width * 4}"
     e_tiled = int(np.prod(book.agg_order.shape))
-    return (f"agg_bytes={spec.num_layers * 2 * e_tiled * d * 4};"
+    return (f"agg_bytes={spec.num_layers * 2 * e_tiled * width * 4};"
             f"tiled_pad_frac={1.0 - e2 / max(e_tiled, 1):.3f}")
 
 
@@ -48,8 +53,42 @@ def _time_steps(step_fn, reps: int = 3) -> float:
     return best
 
 
+def segment_reduce_bench() -> None:
+    """Measured scatter-vs-tiled segment-reduce rows, one per combiner:
+    the kernel-level proof that BOTH the sum (GNN neighbor aggregation) and
+    the max (GAT softmax stabilisation) run without a data-dependent
+    scatter under the tiled backend."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    v = max(int(65536 * AGG_SCALE / 0.02), 1024)
+    e, f = 16 * v, 64
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = jnp.asarray(rng.normal(size=(e, f)).astype(np.float32))
+    order, ldst, _ = ops.prepare_tiled_edges(dst, v)
+    jdst = jnp.asarray(dst)
+    order, ldst = jnp.asarray(order), jnp.asarray(ldst)
+    for reduce in ("sum", "max"):
+        times = {}
+        for backend in ("scatter", "tiled"):
+            kw = ({} if backend == "scatter"
+                  else {"edge_order": order, "local_dst": ldst})
+            fn = jax.jit(lambda m, bk=backend, rd=reduce, kw=kw: ops.aggregate(
+                m, jdst, v, backend=bk, reduce=rd, **kw))
+            times[backend] = _time_steps(
+                lambda: jax.block_until_ready(fn(msgs)))
+            emit(f"roofline.agg.segreduce.{reduce}.{backend}",
+                 times[backend], f"edges={e};rows={v};feat={f}")
+        emit(f"roofline.agg.segreduce.{reduce}.speedup", 0.0,
+             f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
+
+
 def agg_backend_bench() -> None:
-    """Measured scatter-vs-tiled step time (the tentpole's proof row)."""
+    """Measured scatter-vs-tiled step time (the tentpole's proof row);
+    gat additionally runs its softmax max through the tiled segment-max."""
     import dataclasses
 
     from repro.core.edge_partition import partition_edges
@@ -65,7 +104,7 @@ def agg_backend_bench() -> None:
     labels = rng.integers(0, 8, g.num_vertices).astype(np.int32)
     train = rng.random(g.num_vertices) < 0.3
 
-    for model in ("sage", "gcn"):
+    for model in ("sage", "gcn", "gat"):
         spec = GNNSpec(model=model, feature_dim=32, hidden_dim=32,
                        num_classes=8, num_layers=2)
         for k in (1, 4):
@@ -104,6 +143,7 @@ def agg_backend_bench() -> None:
 def main() -> None:
     smoke = "--smoke" in sys.argv or os.environ.get("BENCH_FAST") == "1"
     if smoke:
+        segment_reduce_bench()
         agg_backend_bench()
     if not os.path.exists(RESULTS):
         emit("roofline.missing", 0.0,

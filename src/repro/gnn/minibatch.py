@@ -23,12 +23,14 @@ adjacency costs for ALL remote vertices because the cache holds features,
 not adjacency.
 
 Aggregation backend (`GNNSpec.agg_backend` in {scatter, tiled, pallas}): the
-forward pass aggregates each MFG layer through `kernels.ops.aggregate`. For
-the tiled/pallas backends the host sampler attaches a per-layer tiled edge
-layout (`SampledLayer.agg_order`/`agg_ldst`, sized by the static pad plan via
+forward pass aggregates each MFG layer through `kernels.ops.aggregate` —
+sums and GAT's stabilisation max alike. For the tiled/pallas backends the
+host sampler attaches a per-layer tiled edge layout
+(`SampledLayer.agg_order`/`agg_ldst`, sized by the static pad plan via
 `LayerPad.tiled_plan`) so the device step — compiled once — runs the
-pre-sorted segment-SpMM instead of a data-dependent scatter; its backward is
-a plain gather (custom_vjp in ops.py), so gradients match the scatter oracle.
+pre-sorted segment-reduce instead of a data-dependent scatter; the sum's
+backward is a plain gather (custom_vjp in ops.py), so gradients match the
+scatter oracle, and the max is stop_gradient'd (exact by shift-invariance).
 
 On this container the k workers are simulated with `jax.vmap(axis_name=...)`
 over stacked per-worker batches — identical collective semantics to the
@@ -72,19 +74,23 @@ AXIS = "workers"
 # Device-side mini-batch model (directed MFG layers + self connection).
 # `lay` = dict(esrc, edst, emask, deg, agg_order, agg_ldst); n_dst is static
 # (from the pad plan). Aggregation targets are sized n_dst+1; index n_dst is
-# the padding sink. Sum-aggregations go through `ops.aggregate` (`backend` in
-# {scatter, tiled, pallas}); the tiled layout is per-layer, per-batch, shaped
-# by the static pad plan (LayerPad.tiled_plan), so the device step still
-# compiles once. GAT's per-destination max stays an `at[].max` scatter.
+# the padding sink. Every edge aggregation — the sums AND GAT's softmax
+# stabilisation max — goes through `ops.aggregate` (`backend` in {scatter,
+# tiled, pallas}); the tiled layout is per-layer, per-batch, shaped by the
+# static pad plan (LayerPad.tiled_plan), so the device step still compiles
+# once, and the GAT layer stack runs scatter-free under the tiled/pallas
+# backends (the stabilisation max is stop_gradient'd — exact, softmax is
+# shift-invariant).
 # ---------------------------------------------------------------------------
 
 
-def _mb_aggregate(messages, lay, n_dst: int, backend: str):
-    """Sum per-edge messages into the [n_dst+1, d] destination rows."""
+def _mb_aggregate(messages, lay, n_dst: int, backend: str,
+                  reduce: str = "sum"):
+    """Reduce per-edge messages into the [n_dst+1, d] destination rows."""
     return ops.aggregate(
         messages, lay["edst"], n_dst + 1,
         edge_order=lay.get("agg_order"), local_dst=lay.get("agg_ldst"),
-        backend=backend,
+        backend=backend, reduce=reduce,
     )
 
 
@@ -117,12 +123,13 @@ def _mb_gat_layer(p, h_src, lay, n_dst: int, *, final: bool,
     s_dst_pad = jnp.pad(s_dst, ((0, 1), (0, 0)))
     e = jax.nn.leaky_relu(s_src[lay["esrc"]] + s_dst_pad[lay["edst"]], 0.2)
     e = jnp.where(lay["emask"][:, None], e, -1e30)
-    e_self = jax.nn.leaky_relu(
-        jnp.einsum("nhd,hd->nh", z[:n_dst], p["a_src"]) + s_dst, 0.2
-    )
+    e_self = jax.nn.leaky_relu(s_src[:n_dst] + s_dst, 0.2)
 
-    m = jnp.full((n_dst + 1, heads), -1e30, h_src.dtype).at[lay["edst"]].max(e)
-    m = jnp.maximum(m[:-1], e_self)
+    # softmax stabilisation max through the same tiled segment-reduce as the
+    # sums; stop_gradient is exact (softmax is shift-invariant) and keeps
+    # the backward scatter-free (see ops.aggregate)
+    m = _mb_aggregate(e, lay, n_dst, backend, reduce="max")
+    m = jax.lax.stop_gradient(jnp.maximum(m[:-1], e_self))
     m_pad = jnp.pad(m, ((0, 1), (0, 0)))
     w = jnp.exp(e - m_pad[lay["edst"]]) * lay["emask"][:, None]
     w_self = jnp.exp(e_self - m)

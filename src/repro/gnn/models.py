@@ -19,17 +19,21 @@ DistGNN and the paper's DistDGL setup use).
 
 Models follow the paper's setup (§4.1/§5.1): GraphSAGE (mean), GCN, GAT.
 
-Aggregation backend (`GNNSpec.agg_backend`): every sum-aggregation goes
+Aggregation backend (`GNNSpec.agg_backend`): every edge aggregation — the
+sum-aggregations AND GAT's per-destination softmax-stabilisation max — goes
 through `kernels.ops.aggregate`, which dispatches on the knob —
-  scatter — data-dependent `at[].add` (the oracle)
+  scatter — data-dependent `at[].add` / `at[].max` (the oracle)
   tiled   — pre-sorted/pre-blocked layout (`Block.agg_order`/`agg_ldst`,
-            built by the partition book) through the tiled segment-SpMM:
-            jnp oracle off-TPU, the Pallas one-hot-matmul kernel on TPU.
-            Backward is a plain gather (custom_vjp), so gradients match the
-            scatter oracle to allclose.
+            built by the partition book) through the tiled segment-reduce:
+            jnp oracle off-TPU, the Pallas one-hot kernel on TPU. Backward
+            of the sum is a plain gather (custom_vjp), so gradients match
+            the scatter oracle to allclose; the stabilisation max is
+            stop_gradient'd (exact — softmax is shift-invariant), so the
+            O(E) edge-aggregation hot path of every model, GAT included,
+            is scatter-free under tiled/pallas. (The k-way replica sync
+            still scatters into its bucket-sized halo buffers —
+            O(replicas), the network path, not the edge hot path.)
   pallas  — like tiled but forces the Pallas kernel (interpreted on CPU).
-GAT's per-destination max (softmax stabilisation) still uses `at[].max`
-(see ROADMAP: GAT max/softmax tiling).
 """
 
 from __future__ import annotations
@@ -104,23 +108,31 @@ def init_params(spec: GNNSpec, seed: int = 0) -> Params:
 # ---------------------------------------------------------------------------
 
 
-def _scatter_sum_bidir(values_src, values_dst, blk, num_rows,
-                       backend: str = "scatter"):
-    """Sum messages over the symmetrised edge list into vertex rows.
+def _scatter_bidir(values_src, values_dst, blk, num_rows,
+                   backend: str = "scatter", reduce: str = "sum"):
+    """Reduce messages over the symmetrised edge list into vertex rows.
 
     values_src: [E, d] message carried by the edge toward `edst`
     values_dst: [E, d] message toward `esrc` (reverse direction)
-    Padding edges point at the dummy row (num_rows-1) and carry zeros.
+    Padding edges point at the dummy row (num_rows-1) and carry the reduce
+    identity's stand-in (zeros for sum, the -1e30 mask floor for max).
 
     Dispatches to `ops.aggregate`: the symmetrised list is the concatenation
     [values_src -> edst | values_dst -> esrc], whose tiled layout the
     partition book precomputed into `blk.agg_order`/`blk.agg_ldst`.
+
+    For reduce="max", rows no valid edge reaches come back as -inf
+    (tiled/pallas drop masked edges from the layout) or as the masked score
+    floor -1e30 (scatter sees the masked messages) — callers clamp with
+    `jnp.maximum` against a finite floor (e_self, then -1e29) before use,
+    after which the backends agree exactly.
     """
     messages = jnp.concatenate([values_src, values_dst], axis=0)
     dst = jnp.concatenate([blk.edst, blk.esrc], axis=0)
     return ops.aggregate(
         messages, dst, num_rows,
         edge_order=blk.agg_order, local_dst=blk.agg_ldst, backend=backend,
+        reduce=reduce,
     )
 
 
@@ -129,7 +141,7 @@ def sage_layer(p, x, blk, sync, *, final: bool,
     n = x.shape[0]
     msg = x[blk.esrc] * blk.emask[:, None]
     msg_rev = x[blk.edst] * blk.emask[:, None]
-    agg = _scatter_sum_bidir(msg, msg_rev, blk, n, backend)
+    agg = _scatter_bidir(msg, msg_rev, blk, n, backend)
     agg = sync.reduce_sum(agg)          # mirrors' partials -> masters
     agg = sync.broadcast(agg)           # masters' totals  -> mirrors
     mean = agg / jnp.maximum(blk.degree, 1.0)[:, None]
@@ -143,7 +155,7 @@ def gcn_layer(p, x, blk, sync, *, final: bool,
     dnorm = 1.0 / jnp.sqrt(blk.degree + 1.0)  # self-loop-augmented degree
     msg = (x * dnorm[:, None])[blk.esrc] * blk.emask[:, None]
     msg_rev = (x * dnorm[:, None])[blk.edst] * blk.emask[:, None]
-    agg = _scatter_sum_bidir(msg, msg_rev, blk, n, backend)
+    agg = _scatter_bidir(msg, msg_rev, blk, n, backend)
     # Self-loop term once per vertex: gate by master so replicas don't
     # double-count it in the cross-partition reduction.
     self_term = x * (dnorm * dnorm)[:, None] * blk.master[:, None]
@@ -173,27 +185,28 @@ def gat_layer(p, x, blk, sync, *, final: bool,
     e_self = jnp.where(blk.master[:, None],
                        jax.nn.leaky_relu(s_src + s_dst, 0.2), neg_inf)
 
-    # 1) global max per destination (for a stable softmax)
-    m = jnp.full((n, h_heads), neg_inf, x.dtype)
-    m = m.at[blk.edst].max(e_fwd)
-    m = m.at[blk.esrc].max(e_rev)
+    # 1) global max per destination (for a stable softmax). Softmax is
+    # shift-invariant, so the stabilisation shift needs no gradient:
+    # stop_gradient is exact and keeps the backward free of any
+    # scatter-max / argmax transpose (see ops.aggregate).
+    m = _scatter_bidir(e_fwd, e_rev, blk, n, backend, reduce="max")
     m = jnp.maximum(m, e_self)
     m = sync.reduce_max(m)
     m = sync.broadcast(m)
-    m_safe = jnp.maximum(m, -1e29)  # isolated vertices
+    m_safe = jax.lax.stop_gradient(jnp.maximum(m, -1e29))  # isolated vertices
 
     # 2) global sum of exp
     w_fwd = jnp.exp(e_fwd - m_safe[blk.edst]) * blk.emask[:, None]
     w_rev = jnp.exp(e_rev - m_safe[blk.esrc]) * blk.emask[:, None]
     w_self = jnp.exp(e_self - m_safe) * blk.master[:, None]
-    den = _scatter_sum_bidir(w_fwd, w_rev, blk, n, backend)
+    den = _scatter_bidir(w_fwd, w_rev, blk, n, backend)
     den = den + w_self
     den = sync.reduce_sum(den)
     den = sync.broadcast(den)
     den = jnp.maximum(den, 1e-16)
 
     # 3) attention-weighted aggregate
-    num = _scatter_sum_bidir(
+    num = _scatter_bidir(
         (w_fwd[:, :, None] * z[blk.esrc]).reshape(-1, h_heads * dh),
         (w_rev[:, :, None] * z[blk.edst]).reshape(-1, h_heads * dh),
         blk, n, backend,

@@ -44,37 +44,52 @@ def _pick_tile_f(f: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_rows", "tile_v", "block_e", "use_pallas", "interpret"))
+    "num_rows", "combiner", "tile_v", "block_e", "use_pallas", "interpret"))
 def segment_spmm(
     messages: jnp.ndarray,
     local_dst: jnp.ndarray,
     num_rows: int,
     *,
+    combiner: str = "sum",
     tile_v: int = DEFAULT_TILE_V,
     block_e: int = DEFAULT_BLOCK_E,
     use_pallas: bool | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Tiled segment-sum. `messages`/`local_dst` must come from a
-    `prepare_tiled_edges` layout built with the SAME (tile_v, block_e);
-    non-TPU backends use the oracle."""
+    """Tiled segment-reduce (`combiner` in {"sum", "max"}; see
+    kernels/segment_spmm.py for the combiner semantics — init 0 vs -inf,
+    MXU one-hot matmul vs VPU masked max). `messages`/`local_dst` must come
+    from a `prepare_tiled_edges` layout built with the SAME (tile_v,
+    block_e); non-TPU backends use the oracle. `num_rows` may be unpadded —
+    both paths derive the tile grid from `tiled_shape` and return
+    [num_rows, F]."""
+    # Derive the grid the layout was built with (the ONE padding rule,
+    # tiling.tiled_shape) — floor-dividing num_rows here would mis-bin every
+    # edge of the trailing tiles when num_rows is unpadded.
+    e = messages.shape[0]
+    rows_padded, n_tiles = tiled_shape(num_rows, tile_v)
+    assert e % n_tiles == 0, (
+        f"tiled layout mismatch: {e} edges do not split over {n_tiles} row "
+        f"tiles (num_rows={num_rows}, tile_v={tile_v}); was the layout built "
+        f"with a different (num_rows, tile_v)?")
     use = _on_tpu() if use_pallas is None else use_pallas
     if use or interpret:
-        return _spmm_pallas(
-            messages, local_dst, num_rows,
-            block_e=block_e, tile_v=tile_v,
+        out = _spmm_pallas(
+            messages, local_dst, rows_padded,
+            combiner=combiner, block_e=block_e, tile_v=tile_v,
             tile_f=_pick_tile_f(messages.shape[1]),
             interpret=interpret or not _on_tpu(),
         )
+        return out[:num_rows]
     # oracle path: local_dst is tile-relative; rebuild global ids
-    e = messages.shape[0]
-    n_tiles = max(num_rows // tile_v, 1)
     per_tile = e // n_tiles
     tile_idx = jnp.arange(e) // per_tile
     gdst = jnp.where(
         local_dst >= tile_v, num_rows, tile_idx * tile_v + local_dst
-    )
-    return ref.segment_sum_ref(messages, gdst.astype(jnp.int32), num_rows)
+    ).astype(jnp.int32)
+    if combiner == "max":
+        return ref.segment_max_ref(messages, gdst, num_rows)
+    return ref.segment_sum_ref(messages, gdst, num_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -97,12 +112,11 @@ def _tiled_aggregate(num_rows, tile_v, block_e, use_pallas, interpret,
     e, f = messages.shape
     msg_pad = jnp.concatenate(
         [messages, jnp.zeros((1, f), messages.dtype)], axis=0)
-    out = segment_spmm(
-        msg_pad[edge_order], local_dst, tiled_shape(num_rows, tile_v)[0],
+    return segment_spmm(
+        msg_pad[edge_order], local_dst, num_rows,
         tile_v=tile_v, block_e=block_e,
         use_pallas=use_pallas, interpret=interpret,
     )
-    return out[:num_rows]
 
 
 def _tiled_aggregate_fwd(num_rows, tile_v, block_e, use_pallas, interpret,
@@ -123,6 +137,76 @@ def _tiled_aggregate_bwd(num_rows, tile_v, block_e, use_pallas, interpret,
 _tiled_aggregate.defvjp(_tiled_aggregate_fwd, _tiled_aggregate_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _tiled_aggregate_max(num_rows, tile_v, block_e, use_pallas, interpret,
+                         messages, dst, edge_order, local_dst):
+    """Tiled segment-max of `messages` into `num_rows` rows.
+
+    Forward runs the same pre-sorted / pre-blocked layout as the sum, with
+    combiner="max" (init -inf). Backward is a masked-argmax gather: the
+    cotangent of row r flows to the layout-present edges whose message
+    EQUALS the row max (exact — the kernel takes maxes without arithmetic,
+    so the comparison reproduces the forward selection), split evenly among
+    ties — the same even-subgradient convention as the `at[].max` scatter
+    oracle, so gradients match it on any data the layout kept in full; an
+    edge the layout dropped (`valid`-masked) is not part of the computed
+    max and gets zero cotangent even if its message ties the surviving row
+    max (the scatter oracle, which still sees that edge, would hand it a
+    tie share — gradient parity on dropped edges needs them strictly below
+    the surviving max). The GAT hot path wraps this in lax.stop_gradient
+    and never runs the backward — the vjp exists for standalone use of
+    aggregate(reduce="max").
+    """
+    del dst  # forward uses the tiled layout only; dst feeds the backward
+    e, f = messages.shape
+    msg_pad = jnp.concatenate(
+        [messages, jnp.full((1, f), -jnp.inf, messages.dtype)], axis=0)
+    return segment_spmm(
+        msg_pad[edge_order], local_dst, num_rows,
+        combiner="max", tile_v=tile_v, block_e=block_e,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+
+
+def _tiled_aggregate_max_fwd(num_rows, tile_v, block_e, use_pallas, interpret,
+                             messages, dst, edge_order, local_dst):
+    out = _tiled_aggregate_max(num_rows, tile_v, block_e, use_pallas,
+                               interpret, messages, dst, edge_order, local_dst)
+    return out, (messages, dst, out, edge_order, local_dst)
+
+
+def _tiled_aggregate_max_bwd(num_rows, tile_v, block_e, use_pallas, interpret,
+                             res, g):
+    messages, dst, out, edge_order, local_dst = res
+    e, f = messages.shape
+    dstc = jnp.minimum(dst, num_rows)
+    # The forward maxes over the edges PRESENT in the layout; a dropped
+    # (`valid`-masked) edge is not part of the computed function even when
+    # its message happens to tie the surviving row max, so it must get zero
+    # cotangent (and stay out of the tie denominator — which the layouted
+    # tie count below already guarantees).
+    in_layout = jnp.zeros((e + 1,), jnp.bool_).at[edge_order].set(True)[:e]
+    # sink row compares against +inf (never the max) and carries zero grad
+    out_pad = jnp.concatenate(
+        [out, jnp.full((1, f), jnp.inf, out.dtype)], axis=0)
+    g_pad = jnp.concatenate([g, jnp.zeros((1, f), g.dtype)], axis=0)
+    is_max = (messages == out_pad[dstc]) & in_layout[:, None]
+    # even split among ties (the scatter oracle's subgradient convention):
+    # per-row tie counts via the tiled segment-sum of the argmax mask
+    ties = _tiled_aggregate(num_rows, tile_v, block_e, use_pallas, interpret,
+                            is_max.astype(g.dtype), dst, edge_order, local_dst)
+    ties_pad = jnp.concatenate([ties, jnp.ones((1, f), g.dtype)], axis=0)
+    share = g_pad[dstc] / jnp.maximum(ties_pad[dstc], 1.0)
+    grad_messages = jnp.where(is_max, share, 0.0).astype(messages.dtype)
+    return grad_messages, None, None, None
+
+
+_tiled_aggregate_max.defvjp(_tiled_aggregate_max_fwd, _tiled_aggregate_max_bwd)
+
+
+AGG_REDUCES = ("sum", "max")
+
+
 def aggregate(
     messages: jnp.ndarray,    # [E, F] per-edge messages (original edge order)
     dst: jnp.ndarray,         # [E] int32 destination row per edge (< num_rows)
@@ -131,26 +215,55 @@ def aggregate(
     edge_order: jnp.ndarray | None = None,  # from prepare_tiled_edges
     local_dst: jnp.ndarray | None = None,
     backend: str = "scatter",
+    reduce: str = "sum",
     tile_v: int = DEFAULT_TILE_V,
     block_e: int = DEFAULT_BLOCK_E,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Segment-sum `messages` into `[num_rows, F]` vertex rows.
+    """Segment-reduce `messages` into `[num_rows, F]` vertex rows.
 
     backend:
-      scatter — data-dependent `at[].add` (the oracle; XLA scatter)
-      tiled   — `prepare_tiled_edges` layout through the tiled segment-sum
-                (jnp oracle off-TPU, Pallas kernel on TPU); custom_vjp gather
+      scatter — data-dependent `at[].add` / `at[].max` (the oracle; XLA
+                scatter)
+      tiled   — `prepare_tiled_edges` layout through the tiled segment-reduce
+                (jnp oracle off-TPU, Pallas kernel on TPU); custom_vjp
                 backward
       pallas  — like tiled but forces the Pallas kernel (interpreted on CPU;
                 tests use this)
 
-    The tiled layout may drop edges whose messages are identically zero
-    (padding edges) — forward values and gradients still match the scatter
-    oracle, because a zero message contributes nothing and the backward
-    gather `g[dst]` is the same linear transpose either way.
+    reduce:
+      sum — the segment-SpMM. Backward is a plain gather g[dst] (the
+            transpose of a pre-sorted scatter-add).
+      max — segment-max (init -inf: rows no edge reaches come back as -inf;
+            clamp with jnp.maximum against a finite floor before exp/log).
+            Backward is a masked-argmax gather, split evenly among tied
+            edges (the scatter oracle's convention, so gradients match it
+            even on ties). GNN softmax stabilisation — the one max
+            on the GAT hot path — does NOT need it: softmax is
+            shift-invariant, so the stabilisation max is wrapped in
+            lax.stop_gradient at the call sites (gnn/models.py,
+            gnn/minibatch.py), which is exact and keeps the backward free of
+            any scatter/argmax transpose.
+
+    The tiled layout may drop `valid`-masked edges — forward values still
+    match the scatter oracle as long as dropped messages carry the reduce
+    identity's certainty: identically zero for sum, at or below every
+    surviving score for max (the GAT layers mask scores to -1e30 > -inf,
+    and clamp the aggregate before use, so both backends agree after
+    clamping). Gradients match too, except that a dropped edge exactly
+    TYING the surviving row max gets zero cotangent here (it is not part of
+    the computed max) while the scatter oracle — which still sees it —
+    hands it a tie share; strict inequality on dropped edges restores full
+    parity.
     """
+    if reduce not in AGG_REDUCES:
+        raise ValueError(f"unknown aggregate reduce {reduce!r}; "
+                         f"options: {AGG_REDUCES}")
     if backend == "scatter":
+        if reduce == "max":
+            out = jnp.full((num_rows + 1, messages.shape[-1]), -jnp.inf,
+                           messages.dtype)
+            return out.at[jnp.minimum(dst, num_rows)].max(messages)[:num_rows]
         out = jnp.zeros((num_rows + 1, messages.shape[-1]), messages.dtype)
         return out.at[jnp.minimum(dst, num_rows)].add(messages)[:num_rows]
     if backend not in AGG_BACKENDS:
@@ -163,7 +276,8 @@ def aggregate(
             "empty tiled layout: the partition book / sample plan was built "
             "without tiled_layout=True but a tiled backend was requested")
     use_pallas = None if backend == "tiled" else True
-    return _tiled_aggregate(
+    fn = _tiled_aggregate_max if reduce == "max" else _tiled_aggregate
+    return fn(
         num_rows, tile_v, block_e, use_pallas, interpret,
         messages, dst, edge_order, local_dst,
     )

@@ -17,6 +17,19 @@ def segment_sum_ref(messages: jnp.ndarray, seg_ids: jnp.ndarray,
     return out[:num_segments]
 
 
+def segment_max_ref(messages: jnp.ndarray, seg_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Reference for the segment-max kernel (combiner="max"): per-row max of
+    messages[e] over rows seg_ids[e]. Same contract as segment_sum_ref —
+    seg_ids may contain num_segments as a padding sink — but the reduction
+    identity is -inf, so rows no edge reaches come back as -inf (callers
+    clamp against a finite floor before use; see ops.aggregate)."""
+    out = jnp.full((num_segments + 1, messages.shape[1]), -jnp.inf,
+                   messages.dtype)
+    out = out.at[seg_ids].max(messages)
+    return out[:num_segments]
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         scale: float | None = None) -> jnp.ndarray:
     """Reference attention. q [B, H, Sq, D]; k, v [B, H, Skv, D]."""

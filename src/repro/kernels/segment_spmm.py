@@ -1,18 +1,26 @@
-"""Pallas TPU kernel: tiled segment-sum for GNN neighbor aggregation.
+"""Pallas TPU kernel: tiled segment-reduce (sum | max) for GNN aggregation.
 
 The paper's compute hot spot is sparse neighbor aggregation (SpMM over the
 partition-local edge list). TPU adaptation of the insight (DESIGN.md §2):
 data-dependent scatters are hostile to the MXU/VPU, but a scatter whose
-segment ids are PRE-SORTED and PRE-TILED becomes a *one-hot matmul* — an MXU
-operation. The host (partition book) sorts edges by destination once per
-graph and blocks them so one edge block touches one row tile:
+segment ids are PRE-SORTED and PRE-TILED becomes a dense tile operation. The
+host (partition book) sorts edges by destination once per graph and blocks
+them so one edge block touches one row tile:
 
   grid = (row_tiles, edge_blocks_per_tile, feature_tiles)
   kernel: P[r, e] = one_hot(local_dst)          (VPU compare on iota)
-          acc    += P^T-free: out_tile += P @ messages      (MXU)
+  sum:    acc    += P @ messages                (MXU matmul)
+  max:    acc     = max(acc, masked-max over edge chunks)   (VPU)
+
+The same one-hot layout serves both combiners; only the init value (0 vs
+-inf) and the accumulation differ. Max has no matmul form (it is a reduction
+over the tropical semiring, which the MXU does not implement), so the kernel
+sweeps the edge block in chunks sized to a VMEM budget and takes a masked
+`jnp.max` per chunk — still fully dense and data-independent.
 
 VMEM per step = BLOCK_E x TILE_F messages + TILE_V x TILE_F accumulator +
-TILE_V x BLOCK_E one-hot — all tiled to multiples of (8, 128) lanes.
+TILE_V x BLOCK_E one-hot (+ TILE_V x CHUNK_E x TILE_F for the max sweep) —
+all tiled to multiples of (8, 128) lanes.
 
 The jit'd wrapper (ops.py) validates shapes and falls back to the pure-jnp
 oracle (ref.py) on non-TPU backends; interpret=True is used by the tests.
@@ -32,29 +40,69 @@ from repro.kernels.tiling import (  # noqa: F401 (canonical tile constants)
     DEFAULT_TILE_V,
 )
 
+COMBINERS = ("sum", "max")
 
-def _segment_spmm_kernel(dst_ref, msg_ref, out_ref, *, block_e, tile_v):
-    """One grid step: accumulate one edge block into its row tile.
+# VMEM budget for the max sweep's [tile_v, chunk_e, tile_f] intermediate
+_MAX_SWEEP_BYTES = 2 << 20
+
+
+def _max_chunk_e(block_e: int, tile_v: int, tile_f: int) -> int:
+    """Largest chunk of the edge block whose masked-max intermediate
+    [tile_v, chunk_e, tile_f] fits the VMEM budget (chunk divides block_e)."""
+    chunk = block_e
+    while (chunk > 8 and chunk % 2 == 0
+           and tile_v * chunk * tile_f * 4 > _MAX_SWEEP_BYTES):
+        chunk //= 2
+    return chunk
+
+
+def _segment_reduce_kernel(dst_ref, msg_ref, out_ref, *, block_e, tile_v,
+                           combiner, chunk_e):
+    """One grid step: fold one edge block into its row tile.
 
     dst_ref: [block_e]        int32 — LOCAL row ids within this row tile
                                (pad edges -> tile_v, i.e. out of range)
     msg_ref: [block_e, tile_f] message block
     out_ref: [tile_v, tile_f]  row-tile accumulator (same tile for all edge
-                               blocks of this row tile; zeroed at step 0)
+                               blocks of this row tile; initialised at step 0
+                               to the combiner identity: 0 for sum, -inf for
+                               max)
     """
     eb = pl.program_id(1)
 
     @pl.when(eb == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        if combiner == "sum":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, -jnp.inf)
 
     dst = dst_ref[...]
-    # one-hot [tile_v, block_e] via iota comparison (VPU), then MXU matmul
+    # one-hot [tile_v, block_e] via iota comparison (VPU)
     rows = jax.lax.broadcasted_iota(jnp.int32, (tile_v, block_e), 0)
-    onehot = (rows == dst[None, :]).astype(msg_ref.dtype)
-    out_ref[...] += jax.lax.dot(
-        onehot, msg_ref[...], preferred_element_type=out_ref.dtype
-    )
+    hits = rows == dst[None, :]
+    if combiner == "sum":
+        # MXU matmul: out-of-range (padding) dst rows vanish in the one-hot
+        out_ref[...] += jax.lax.dot(
+            hits.astype(msg_ref.dtype), msg_ref[...],
+            preferred_element_type=out_ref.dtype,
+        )
+    else:
+        # masked max, swept in chunks so the [tile_v, chunk_e, tile_f]
+        # broadcast stays within the VMEM budget; padding edges hit no row
+        # and contribute -inf (the max identity)
+        msg = msg_ref[...].astype(out_ref.dtype)
+        neg_inf = jnp.asarray(-jnp.inf, out_ref.dtype)
+
+        def body(i, acc):
+            m = jax.lax.dynamic_slice_in_dim(msg, i * chunk_e, chunk_e, 0)
+            h = jax.lax.dynamic_slice_in_dim(hits, i * chunk_e, chunk_e, 1)
+            cand = jnp.max(
+                jnp.where(h[:, :, None], m[None, :, :], neg_inf), axis=1)
+            return jnp.maximum(acc, cand)
+
+        out_ref[...] = jax.lax.fori_loop(
+            0, block_e // chunk_e, body, out_ref[...])
 
 
 def segment_spmm(
@@ -62,18 +110,24 @@ def segment_spmm(
     local_dst: jnp.ndarray,  # [E] int32 row id WITHIN the edge's row tile
     num_rows: int,
     *,
+    combiner: str = "sum",
     block_e: int = DEFAULT_BLOCK_E,
     tile_v: int = DEFAULT_TILE_V,
     tile_f: int = DEFAULT_TILE_F,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Segment sum with the tiling contract described in the module docstring.
+    """Segment reduce with the tiling contract described in the module
+    docstring. `combiner` is static: "sum" (init 0, MXU one-hot matmul) or
+    "max" (init -inf, VPU masked max). Rows no edge reaches come back as the
+    combiner identity (0 / -inf).
 
     E must be row-tile-blocked: edges of row tile r occupy the contiguous
     range [r * epr, (r+1) * epr) where epr = E // num_row_tiles, padded with
-    local_dst == tile_v (one-hot of an out-of-range row vanishes).
-    `prepare_tiled_edges` (ops.py) produces this layout from raw (dst, msg).
+    local_dst == tile_v (an out-of-range row hits nothing under either
+    combiner). `prepare_tiled_edges` (ops.py) produces this layout from raw
+    (dst, msg).
     """
+    assert combiner in COMBINERS, combiner
     e, f = messages.shape
     assert num_rows % tile_v == 0, (num_rows, tile_v)
     assert f % tile_f == 0, (f, tile_f)
@@ -83,7 +137,8 @@ def segment_spmm(
 
     grid = (n_tiles, blocks_per_tile, f // tile_f)
     kernel = functools.partial(
-        _segment_spmm_kernel, block_e=block_e, tile_v=tile_v
+        _segment_reduce_kernel, block_e=block_e, tile_v=tile_v,
+        combiner=combiner, chunk_e=_max_chunk_e(block_e, tile_v, tile_f),
     )
     return pl.pallas_call(
         kernel,

@@ -23,6 +23,23 @@ def tiled_shape(num_rows: int, tile_v: int = DEFAULT_TILE_V) -> tuple[int, int]:
     return rows_padded, rows_padded // tile_v
 
 
+def _check_dst_range(vdst: np.ndarray, num_rows: int, rows_padded: int) -> None:
+    """Every (valid) destination must land inside the padded row range —
+    edges past it would fall into row tiles the kernel grid never visits and
+    silently vanish from the aggregate."""
+    if vdst.size == 0:
+        return
+    lo, hi = int(vdst.min()), int(vdst.max())
+    if lo < 0 or hi >= rows_padded:
+        raise ValueError(
+            f"tiled layout: dst out of range [0, {rows_padded}) "
+            f"(num_rows={num_rows} padded to {rows_padded}); got "
+            f"min={lo}, max={hi}. Edges aimed past the padded row range "
+            f"would be silently dropped — mask them out via `valid` or "
+            f"route them to an in-range padding sink row."
+        )
+
+
 def tiled_need_per_tile(
     dst: np.ndarray,
     num_rows: int,
@@ -33,10 +50,10 @@ def tiled_need_per_tile(
 ) -> int:
     """Smallest legal `per_tile` for this edge list — the block-rounded max
     per-tile edge count — without building the layout (O(E) bincount)."""
-    _, n_tiles = tiled_shape(num_rows, tile_v)
-    vdst = dst if valid is None else dst[valid]
-    counts = np.bincount(np.asarray(vdst, dtype=np.int64) // tile_v,
-                         minlength=n_tiles)
+    rows_padded, n_tiles = tiled_shape(num_rows, tile_v)
+    vdst = np.asarray(dst if valid is None else dst[valid], dtype=np.int64)
+    _check_dst_range(vdst, num_rows, rows_padded)
+    counts = np.bincount(vdst // tile_v, minlength=n_tiles)
     blocks = int(np.ceil(counts.max() / block_e)) if counts.size else 0
     return max(blocks, 1) * block_e
 
@@ -59,11 +76,15 @@ def prepare_tiled_edges(
       local_dst  [E_padded] — row id within the edge's tile (padding -> tile_v)
 
     `valid` (bool[E]) drops edges from the layout entirely; only edges whose
-    messages are guaranteed zero may be dropped (the aggregate stays exact).
-    `per_tile` forces every tile's padded edge count, so several partitions /
-    batches can share one static device shape; it must be a multiple of
-    block_e and at least the largest per-tile edge count
-    (`tiled_need_per_tile`).
+    messages carry the combiner identity (zero for sum, <= any real score for
+    max) may be dropped (the aggregate stays exact). `per_tile` forces every
+    tile's padded edge count, so several partitions / batches can share one
+    static device shape; it must be a multiple of block_e and at least the
+    largest per-tile edge count (`tiled_need_per_tile`).
+
+    Every valid dst must lie in [0, rows_padded) — anything past the padded
+    row range raises ValueError rather than silently vanishing from the
+    aggregate (its row tile would sit outside the kernel grid).
     """
     e = dst.shape[0]
     rows_padded, n_tiles = tiled_shape(num_rows, tile_v)
@@ -73,6 +94,7 @@ def prepare_tiled_edges(
     else:
         idx = np.where(valid)[0].astype(np.int64)
         vdst = np.asarray(dst, dtype=np.int64)[idx]
+    _check_dst_range(vdst, num_rows, rows_padded)
     tile_of = vdst // tile_v
     order = np.argsort(tile_of, kind="stable")
     counts = np.bincount(tile_of, minlength=n_tiles)

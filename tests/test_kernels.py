@@ -30,6 +30,82 @@ def test_segment_spmm_sweep(e, v, f, dtype):
     )
 
 
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,v,f", [(257, 256, 128), (1024, 512, 256),
+                                   (50, 256, 4), (2000, 768, 128)])
+def test_segment_reduce_max_sweep(e, v, f, dtype):
+    """combiner="max" through the Pallas kernel (interpret) == the scatter
+    `at[].max` oracle; rows with no edges are -inf under both. f=4 covers
+    the GAT attention-score width (lane-padded tile)."""
+    rng = np.random.default_rng(e + v + f)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = rng.normal(size=(e, f)).astype(np.float32)
+    order, local_dst, rows_p = ops.prepare_tiled_edges(dst, v)
+    msgs_pad = np.concatenate([msgs, np.full((1, f), -np.inf, np.float32)])[order]
+    expect = ref.segment_max_ref(jnp.asarray(msgs, dtype), jnp.asarray(dst), v)
+    tol = 1e-6 if dtype == np.float32 else 2e-2
+    for kw in ({"use_pallas": False}, {"interpret": True}):
+        out = ops.segment_spmm(
+            jnp.asarray(msgs_pad, dtype), jnp.asarray(local_dst), rows_p,
+            combiner="max", **kw)
+        np.testing.assert_allclose(
+            np.asarray(out[:v], np.float32), np.asarray(expect, np.float32),
+            rtol=tol, atol=tol * 8,
+        )
+
+
+@pytest.mark.parametrize("combiner", ["sum", "max"])
+def test_segment_spmm_oracle_unpadded_num_rows(combiner):
+    """Regression: the oracle path derived n_tiles by floor division and
+    assumed divisibility, so a direct call with an UNPADDED num_rows
+    silently mis-binned every edge of the trailing tiles. Both paths now
+    derive the grid from tiled_shape and return [num_rows, F]."""
+    rng = np.random.default_rng(5)
+    e, v, f = 900, 300, 8  # 300 rows -> 2 tiles of 256; 300 // 256 == 1
+    dst = rng.integers(0, v, e).astype(np.int32)
+    msgs = rng.normal(size=(e, f)).astype(np.float32)
+    order, local_dst, _ = ops.prepare_tiled_edges(dst, v)
+    fill = 0.0 if combiner == "sum" else -np.inf
+    msgs_pad = np.concatenate([msgs, np.full((1, f), fill, np.float32)])[order]
+    ref_fn = ref.segment_sum_ref if combiner == "sum" else ref.segment_max_ref
+    expect = ref_fn(jnp.asarray(msgs), jnp.asarray(dst), v)
+    for kw in ({"use_pallas": False}, {"interpret": True}):
+        out = ops.segment_spmm(
+            jnp.asarray(msgs_pad), jnp.asarray(local_dst), v,  # unpadded!
+            combiner=combiner, **kw)
+        assert out.shape == (v, f)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_segment_spmm_layout_mismatch_fails_loudly():
+    """An edge count that cannot split over the tile grid (layout built for
+    a different num_rows/tile_v) must assert, not mis-bin silently."""
+    msgs = jnp.zeros((3, 8), jnp.float32)  # 3 edges over 2 tiles of v=300
+    local_dst = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(AssertionError, match="tiled layout mismatch"):
+        ops.segment_spmm(msgs, local_dst, 300, use_pallas=False)
+
+
+@pytest.mark.parametrize("fn", ["prepare_tiled_edges", "tiled_need_per_tile"])
+def test_tiled_layout_rejects_out_of_range_dst(fn):
+    """Regression: dst >= rows_padded grew the bincount past n_tiles and the
+    trailing tiles' edges silently vanished from the aggregate. Both layout
+    entry points now reject them; `valid`-masked bad edges stay allowed."""
+    layout_fn = getattr(ops, fn)
+    v = 100  # rows_padded = 256
+    bad = np.array([0, 50, 600], np.int32)
+    with pytest.raises(ValueError, match="dst out of range"):
+        layout_fn(bad, v)
+    with pytest.raises(ValueError, match="dst out of range"):
+        layout_fn(np.array([-1, 3], np.int32), v)
+    # masked out via `valid` -> accepted
+    layout_fn(bad, v, valid=np.array([True, True, False]))
+    # dst inside the padded range but past num_rows is an explicit padding
+    # sink: allowed, lands in rows sliced off by the consumer
+    layout_fn(np.array([0, 255], np.int32), v)
+
+
 @pytest.mark.parametrize("tile_v,block_e", [(128, 256), (64, 128), (512, 512)])
 def test_segment_spmm_nondefault_tiling(tile_v, block_e):
     """The oracle path must reconstruct global dst ids with the SAME tiling
