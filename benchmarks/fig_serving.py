@@ -1,0 +1,101 @@
+"""Beyond-paper sweep: serving latency vs partitioner x cache policy x QPS.
+
+The paper's finding — partitioning quality governs remote traffic — carried
+to the serving workload (repro.serve): every row runs the REAL layer-wise
+inference engine + micro-batched request simulator on a real partition and
+prices per-request latency on the paper's cluster
+(`cost_model.serve_request`). The claims: modeled latency and embedding
+miss bytes fall with partitioning quality (metis < random edge-cut) at
+every cache policy and offered load, and an embedding cache composes with
+— not substitutes for — a good partition, exactly like the training-side
+cache sweep (fig_cache_sweep.py).
+
+Emits one JSON row per (partitioner, policy, qps) combination via the
+shared `core/study.py` serializer; `--out-json PATH` additionally writes
+them as one file (the CI artifact). Standalone `--smoke` runs the trimmed
+grid without env setup (run.py --smoke sets BENCH_FAST for the full suite).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import FAST, SCALE, cache, emit, spec
+from repro.core.study import serve_row, write_rows
+
+SMOKE = FAST or "--smoke" in sys.argv
+# hidden=512 is a paper Table-2 grid point; KB-scale embedding rows make the
+# network term visible against the fixed per-batch overheads
+PARTITIONERS = ("random", "metis") if SMOKE else ("random", "ldg", "metis", "kahip")
+POLICIES = ("none", "degree") if SMOKE else ("none", "random", "degree", "halo")
+QPS = (100.0, 400.0) if SMOKE else (100.0, 400.0, 1200.0)
+SERVE_SCALE = float(os.environ.get("BENCH_SCALE", "0.02")) if SMOKE else SCALE
+N_REQUESTS = 160 if SMOKE else 400
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out-json", default="",
+                    help="also write all rows to this file (CI artifact)")
+    args, _ = ap.parse_known_args()
+
+    c = cache()
+    k = 4
+    sp = spec(feature=64, hidden=512, layers=2)
+    g = c.graph("OR", SERVE_SCALE, 0)
+    budget = max(g.num_vertices // 10, 1)
+    rows = []
+    for method in PARTITIONERS:
+        for policy in POLICIES:
+            for qps in QPS:
+                r = serve_row(
+                    "OR", method, k, sp, scale=SERVE_SCALE, cache=c,
+                    qps=qps, n_requests=N_REQUESTS, hops=1, fanout=10,
+                    max_batch=32, max_wait=5e-4, cache_policy=policy,
+                    cache_budget=0 if policy == "none" else budget,
+                )
+                rows.append(r)
+                print(json.dumps({
+                    "figure": "serving", "graph": "OR", "k": k,
+                    "partitioner": method, "policy": policy, "qps": qps,
+                    "edge_cut": round(r["partition_quality"], 4),
+                    "p50_ms": round(r["latency_p50"] * 1e3, 4),
+                    "p99_ms": round(r["latency_p99"] * 1e3, 4),
+                    "mean_ms": round(r["latency_mean"] * 1e3, 4),
+                    "service_ms": round(r["service_mean"] * 1e3, 4),
+                    "hit_rate": round(r["hit_rate"], 4),
+                    "miss_bytes": r["miss_bytes"],
+                    "qps_sustainable": round(r["qps_sustainable"], 1),
+                }))
+
+    def pick(method, policy, qps):
+        for r in rows:
+            if (r["method"], r["cache_policy"], r["qps_offered"]) == (
+                    method, policy, qps):
+                return r
+        raise KeyError((method, policy, qps))
+
+    # claims: partitioning quality -> latency/miss-bytes, at every load
+    best = "metis"
+    for qps in QPS:
+        rnd, bst = pick("random", "none", qps), pick(best, "none", qps)
+        emit(f"serving.quality.qps{qps:.0f}", 0.0,
+             f"latency_decreases={bst['latency_mean'] < rnd['latency_mean']};"
+             f"miss_pct_random={100.0 * bst['miss_bytes'] / max(rnd['miss_bytes'], 1e-9):.1f};"
+             f"p50_ms={bst['latency_p50']*1e3:.3f}vs{rnd['latency_p50']*1e3:.3f}")
+    cached, uncached = pick(best, "degree", QPS[0]), pick(best, "none", QPS[0])
+    rnd_cached = pick("random", "degree", QPS[0])
+    emit("serving.claims", 0.0,
+         f"cache_composes={cached['miss_bytes'] < uncached['miss_bytes']};"
+         f"quality_beats_cache={cached['miss_bytes'] < rnd_cached['miss_bytes']};"
+         f"hit_rate={cached['hit_rate']:.3f}")
+
+    if args.out_json:
+        write_rows(rows, args.out_json)
+        print(f"# wrote {len(rows)} rows -> {args.out_json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

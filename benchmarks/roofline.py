@@ -140,11 +140,64 @@ def agg_backend_bench() -> None:
          f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
 
 
+def serving_bench() -> None:
+    """Measured serve-step rows (scatter vs tiled): the online micro-batch
+    path — embedding-store gather + final-layer recompute through
+    `ops.aggregate` — alongside the modeled cluster service time. The
+    layer-wise offline pass is timed too (host, per layer)."""
+    import dataclasses
+
+    from repro.core.partition_book import build_vertex_book
+    from repro.core.vertex_partition import partition_vertices
+    from repro.core.graph import paper_graph
+    from repro.gnn.inference import (
+        LayerwiseInference,
+        edge_assignment_from_vertex,
+    )
+    from repro.gnn.models import GNNSpec, init_params
+    from repro.serve import build_serving
+
+    g = paper_graph("OR", scale=AGG_SCALE, seed=0)
+    rng = np.random.default_rng(0)
+    spec0 = GNNSpec(model="sage", feature_dim=32, hidden_dim=32,
+                    num_classes=8, num_layers=2)
+    feats = rng.normal(size=(g.num_vertices, 32)).astype(np.float32)
+    owner = partition_vertices(g, 4, "metis", seed=0)
+    vbook = build_vertex_book(g, owner, 4)
+    ids = rng.integers(0, g.num_vertices, 32)
+
+    times = {}
+    for backend in ("scatter", "tiled"):
+        spec = dataclasses.replace(spec0, agg_backend=backend)
+        params = init_params(spec, seed=0)
+        eng = LayerwiseInference.build(
+            g, edge_assignment_from_vertex(g, owner), 4, spec, params, feats)
+        embeddings = eng.run()
+        emit(f"roofline.serve.layerwise.{backend}", sum(eng.layer_times),
+             f"layers={spec.num_layers};"
+             f"halo_bytes={eng.sync_bytes()}")
+        engines, batchers, _ = build_serving(
+            g, vbook, spec, params, embeddings, hops=1, fanout=10,
+            max_batch=32, cache_policy="degree",
+            cache_budget=max(g.num_vertices // 10, 1))
+        batch = batchers[0].build_mfg(ids)
+        _, stats, _ = engines[0].answer(batch)  # compile + warm
+        times[backend] = _time_steps(lambda: engines[0].answer(batch))
+        est = engines[0].estimate(batch, stats)
+        emit(f"roofline.serve.microbatch.sage.{backend}", times[backend],
+             f"batch=32;edges={batch.num_edges};"
+             f"miss_bytes={stats.miss_bytes};"
+             f"model_service_us={est.service_time*1e6:.0f}")
+    emit("roofline.serve.microbatch.sage.speedup", 0.0,
+         f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv or os.environ.get("BENCH_FAST") == "1"
     if smoke:
         segment_reduce_bench()
         agg_backend_bench()
+        serving_bench()
     if not os.path.exists(RESULTS):
         emit("roofline.missing", 0.0,
              "run `python -m repro.launch.dryrun --all --both-meshes` first")

@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.fig24_batchsize",
     "benchmarks.tab3_amortization",
     "benchmarks.fig_cache_sweep",
+    "benchmarks.fig_serving",
     "benchmarks.roofline",
 ]
 

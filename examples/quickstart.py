@@ -1,8 +1,11 @@
 """Quickstart: partition a graph, train a GNN distributed, verify the
-partitioning invariant, and inspect the paper's core correlation.
+partitioning invariants, and inspect the paper's core correlation — on the
+current knob set (aggregation backends, feature cache).
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--scale 0.05] [--k 8]
 """
+
+import argparse
 
 import numpy as np
 
@@ -10,13 +13,21 @@ from repro.core import cost_model
 from repro.core.edge_partition import partition_edges
 from repro.core.graph import paper_graph
 from repro.core.metrics import edge_partition_metrics
+from repro.core.vertex_partition import partition_vertices
 from repro.gnn.fullbatch import FullBatchTrainer
+from repro.gnn.minibatch import MiniBatchTrainer
 from repro.gnn.models import GNNSpec
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--k", type=int, default=8)
+    args = ap.parse_args()
+    k = args.k
+
     # 1. a graph from the paper's categories (Orkut-like social graph)
-    g = paper_graph("OR", scale=0.05, seed=0)
+    g = paper_graph("OR", scale=args.scale, seed=0)
     print(f"graph: {g.num_vertices} vertices, {g.num_edges} edges")
 
     rng = np.random.default_rng(0)
@@ -27,9 +38,9 @@ def main() -> None:
 
     # 2. the paper's comparison, in three lines per partitioner
     for method in ["random", "hdrf", "hep100"]:
-        a = partition_edges(g, 8, method, seed=1)
-        m = edge_partition_metrics(g, a, 8)
-        tr = FullBatchTrainer.build(g, a, 8, spec, feats, labels, train,
+        a = partition_edges(g, k, method, seed=1)
+        m = edge_partition_metrics(g, a, k)
+        tr = FullBatchTrainer.build(g, a, k, spec, feats, labels, train,
                                     sync_mode="halo", mode="sim")
         est = cost_model.fullbatch_epoch(tr.book, spec)
         loss = tr.train_step()
@@ -37,13 +48,37 @@ def main() -> None:
               f"sync_traffic={tr.comm_bytes_per_epoch()/2**20:7.1f} MiB "
               f"cluster_epoch={est.epoch_time*1e3:7.1f} ms  loss={loss:.4f}")
 
-    # 3. the invariant that makes partitioning safe: distributed == single
+    # 3. the invariants that make the system safe to scale:
+    #    (a) distributed == single-machine forward, and (b) the tiled
+    #    aggregation backend (agg_backend, the Pallas segment-SpMM layout)
+    #    == the scatter oracle — so partitioning and kernel choice never
+    #    change the math
     ref = FullBatchTrainer.build(
         g, np.zeros(g.num_edges, np.int32), 1, spec, feats, labels, train)
-    a = partition_edges(g, 8, "hep100", seed=1)
-    tr = FullBatchTrainer.build(g, a, 8, spec, feats, labels, train, mode="sim")
+    a = partition_edges(g, k, "hep100", seed=1)
+    tr = FullBatchTrainer.build(g, a, k, spec, feats, labels, train, mode="sim")
     err = np.abs(tr.forward_logits_global() - ref.forward_logits_global()).max()
     print(f"distributed == single-machine forward: max err {err:.2e}")
+
+    import dataclasses
+    tiled = FullBatchTrainer.build(
+        g, a, k, dataclasses.replace(spec, agg_backend="tiled"),
+        feats, labels, train, mode="sim")
+    err = np.abs(tiled.forward_logits_global() - ref.forward_logits_global()).max()
+    print(f"tiled agg backend == scatter oracle:    max err {err:.2e}")
+
+    # 4. the DistDGL regime with a feature cache (cache_policy): remote
+    #    misses — the bytes that cross the network — drop when hot remote
+    #    vertices are cached
+    owner = partition_vertices(g, k, "metis", seed=1)
+    for policy, budget in (("none", 0), ("degree", g.num_vertices // 10)):
+        mb = MiniBatchTrainer.build(
+            g, owner, k, spec, feats, labels, train, global_batch=128,
+            seed=2, cache_policy=policy, cache_budget=budget)
+        sm = mb.train_step()
+        print(f"minibatch cache={policy:6s} remote={int(sm.remote_vertices.sum()):5d} "
+              f"hit_rate={sm.hit_rate:.2f} "
+              f"miss_bytes={int(sm.miss_bytes.sum()):8d}  loss={sm.loss:.4f}")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,13 @@ import numpy as np
 from repro.core.partition_book import EdgePartitionBook
 from repro.gnn.models import GNNSpec
 
-__all__ = ["ClusterSpec", "PAPER_CLUSTER", "fullbatch_epoch", "minibatch_step"]
+__all__ = [
+    "ClusterSpec",
+    "PAPER_CLUSTER",
+    "fullbatch_epoch",
+    "minibatch_step",
+    "serve_request",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,17 +66,22 @@ PAPER_CLUSTER = ClusterSpec(
 )
 
 
-def _model_flops_per_vertex(spec: GNNSpec) -> float:
-    """Dense NN flops per vertex for one forward pass (all layers)."""
+def _flops_per_vertex_dims(model: str, dims) -> float:
+    """Dense NN flops per vertex for one forward pass over `dims` layers."""
     total = 0.0
-    for din, dout in spec.dims():
-        if spec.model == "sage":
+    for din, dout in dims:
+        if model == "sage":
             total += 2.0 * din * dout * 2  # self + neigh matmuls
-        elif spec.model == "gcn":
+        elif model == "gcn":
             total += 2.0 * din * dout
         else:  # gat
             total += 2.0 * din * dout + 8.0 * dout
     return total
+
+
+def _model_flops_per_vertex(spec: GNNSpec) -> float:
+    """Dense NN flops per vertex for one forward pass (all layers)."""
+    return _flops_per_vertex_dims(spec.model, spec.dims())
 
 
 def _agg_bytes_per_edge(spec: GNNSpec) -> float:
@@ -220,4 +231,68 @@ def minibatch_step(
         fetch_bytes=fetch_bytes,
         straggler=straggler,
         memory=memory,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Online serving (repro.serve): one micro-batch of target-vertex requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeEstimate:
+    """Cluster service time of ONE micro-batch at one worker."""
+
+    service_time: float   # sample + fetch + compute (serial per worker)
+    sample_time: float
+    fetch_time: float
+    compute_time: float
+    fetch_bytes: int      # embedding-store MISS bytes crossing the network
+
+
+def serve_request(
+    num_input: float,
+    num_remote: float,
+    num_miss: float,
+    edges: float,
+    spec: GNNSpec,
+    *,
+    embed_dim: int,
+    hops: int,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+) -> ServeEstimate:
+    """Price one serving micro-batch from its measured MFG + store metrics.
+
+    The serving phase structure mirrors `minibatch_step`'s, forward-only
+    (inference has no backward, so no 3x): sampling the `hops`-deep MFG
+    (remote adjacency accesses cost network latency), fetching the input
+    frontier's layer-(L-hops) embedding rows — where, exactly like the
+    training feature store, only cache-MISS bytes cross the network
+    (`num_miss` of `num_remote` remote vertices, `embed_dim` * 4 bytes
+    each) — and recomputing the last `hops` layers. Per-request latency =
+    queue wait + this service time; better partitioning => fewer remote
+    rows => fewer miss bytes => lower modeled service time, the paper's
+    mechanism carried to serving.
+    """
+    num_input = float(num_input)
+    edges = float(edges)
+    sample = (edges / cluster.sample_rate
+              + float(num_remote) * cluster.remote_adj_cost
+              + cluster.sample_hop_overhead * hops)
+    fetch_bytes = int(num_miss) * embed_dim * 4
+    fetch = fetch_bytes / cluster.net_bw + cluster.net_latency
+
+    # forward-only dense flops over the recomputed layer suffix
+    dims = spec.dims()[spec.num_layers - hops:]
+    nn = num_input * _flops_per_vertex_dims(spec.model, dims)
+    width = max([embed_dim] + [dout for _, dout in dims])
+    agg = edges * 2.0 * width
+    compute = (nn + agg) / cluster.flops
+
+    return ServeEstimate(
+        service_time=sample + fetch + compute,
+        sample_time=sample,
+        fetch_time=fetch,
+        compute_time=compute,
+        fetch_bytes=fetch_bytes,
     )

@@ -94,6 +94,21 @@ class EdgePartitionBook:
             return 0.0
         return 1.0 - self.replicas_total / payload
 
+    def master_assignment(self) -> np.ndarray:
+        """Per-vertex master partition as an int32 [V] ownership array.
+
+        This is the vertex-partition view of an edge partition: exactly one
+        master per vertex, so the result is a valid `VertexPartitionBook`
+        assignment — how the inference serving path shards its embedding
+        stores when the graph was partitioned by edges.
+        """
+        owner = np.zeros(self.num_vertices, dtype=np.int32)
+        sel = self.master & self.vmask
+        part_of = np.broadcast_to(
+            np.arange(self.k, dtype=np.int32)[:, None], self.master.shape)
+        owner[self.vglobal[sel]] = part_of[sel]
+        return owner
+
     def local_features(self, features: np.ndarray) -> np.ndarray:
         """Replicate global features [V, F] into [k, v_max+1, F] device layout."""
         f = np.zeros((self.k, self.v_max + 1, features.shape[1]), dtype=features.dtype)

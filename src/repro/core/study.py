@@ -1,15 +1,22 @@
-"""The paper's experiment harness (RQ-1 .. RQ-5).
+"""The paper's experiment harness (RQ-1 .. RQ-5) + the serving study.
 
 Runs the full grid — graphs x partitioners x k x GNN hyper-parameters — and
 emits rows that the per-figure benchmarks aggregate. Partitions and books
 are cached per (graph, partitioner, k, seed) because the GNN-parameter grid
 reuses them (exactly how the paper amortises partitioning across runs).
+
+The `*_result_row` functions are the ONE serializer per regime: the study
+grid, the CLI drivers (`launch/gnn_train.py --out-json`,
+`launch/gnn_serve.py --out-json`) and the benchmark figures all build their
+JSON rows through them, so a row means the same thing wherever it was
+produced. `write_rows` is the shared file emitter.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import time
 from typing import Iterable, Optional
 
@@ -105,9 +112,68 @@ def get_cache() -> StudyCache:
     return _GLOBAL_CACHE
 
 
+def _json_default(o):
+    if hasattr(o, "item"):  # numpy scalars
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def _json_clean(v):
+    """Strict-JSON value: non-finite floats -> null (e.g. an idle serving
+    worker's NaN p99 / infinite sustainable QPS), containers recursed."""
+    if isinstance(v, dict):
+        return {k: _json_clean(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple, np.ndarray)):
+        return [_json_clean(x) for x in v]
+    if isinstance(v, np.generic):
+        v = v.item()
+    if isinstance(v, float) and not np.isfinite(v):
+        return None
+    return v
+
+
+def write_rows(rows: Iterable[dict], path: str) -> None:
+    """The one JSON emitter: a list of study-format rows, one strict-JSON
+    file (jq/JSON.parse-safe: no bare NaN/Infinity tokens)."""
+    with open(path, "w") as f:
+        json.dump(_json_clean(list(rows)), f, indent=1,
+                  default=_json_default)
+        f.write("\n")
+
+
 # ---------------------------------------------------------------------------
 # DistGNN-side study rows (full-batch / edge partitioning)
 # ---------------------------------------------------------------------------
+
+
+def fullbatch_result_row(
+    graph_key: str,
+    method: str,
+    k: int,
+    spec: GNNSpec,
+    *,
+    metrics,
+    partition_time: float,
+    est,
+) -> dict:
+    """Serialize one DistGNN result (shared by the study grid and the CLI)."""
+    return {
+        "graph": graph_key, "method": method, "k": k,
+        "model": spec.model, "feature": spec.feature_dim,
+        "hidden": spec.hidden_dim, "layers": spec.num_layers,
+        "rf": metrics.replication_factor,
+        "edge_balance": metrics.edge_balance,
+        "vertex_balance": metrics.vertex_balance,
+        "partition_time": partition_time,
+        "epoch_time": est.epoch_time,
+        "comm_bytes": float(est.comm_bytes.sum()),
+        "memory_total": float(est.memory.sum()),
+        "memory_max": float(est.memory.max()),
+        "memory_balance": float(est.memory.max() / est.memory.mean()),
+        "oom": est.oom,
+    }
 
 
 def fullbatch_row(
@@ -125,21 +191,10 @@ def fullbatch_row(
     g = cache.graph(graph_key, scale, 0)
     rec = cache.edge_partition(g, method, k, seed)
     est = cost_model.fullbatch_epoch(rec.book, spec, cluster)
-    return {
-        "graph": graph_key, "method": method, "k": k,
-        "model": spec.model, "feature": spec.feature_dim,
-        "hidden": spec.hidden_dim, "layers": spec.num_layers,
-        "rf": rec.metrics.replication_factor,
-        "edge_balance": rec.metrics.edge_balance,
-        "vertex_balance": rec.metrics.vertex_balance,
-        "partition_time": rec.partition_time,
-        "epoch_time": est.epoch_time,
-        "comm_bytes": float(est.comm_bytes.sum()),
-        "memory_total": float(est.memory.sum()),
-        "memory_max": float(est.memory.max()),
-        "memory_balance": float(est.memory.max() / est.memory.mean()),
-        "oom": est.oom,
-    }
+    return fullbatch_result_row(
+        graph_key, method, k, spec, metrics=rec.metrics,
+        partition_time=rec.partition_time, est=est,
+    )
 
 
 def fullbatch_speedup(rows: Iterable[dict]) -> list[dict]:
@@ -261,17 +316,44 @@ def minibatch_row(
         seeds_per_worker=max(global_batch // k, 1),
         remote_miss_vertices=misses, cached_vertices=store.cache_sizes,
     )
-    train_total = int(train_mask.sum())
-    steps_per_epoch = max(train_total // global_batch, 1)
+    steps_per_epoch = max(int(train_mask.sum()) // global_batch, 1)
+    return minibatch_result_row(
+        graph_key, method, k, spec, metrics=rec.metrics,
+        partition_time=rec.partition_time, batch=global_batch,
+        inputs=inputs, remote=remote, hits=hits, misses=misses,
+        est=est, steps_per_epoch=steps_per_epoch,
+        cache_policy=cache_policy, cache_budget=cache_budget,
+    )
+
+
+def minibatch_result_row(
+    graph_key: str,
+    method: str,
+    k: int,
+    spec: GNNSpec,
+    *,
+    metrics,
+    partition_time: float,
+    batch: int,
+    inputs: np.ndarray,
+    remote: np.ndarray,
+    hits: np.ndarray,
+    misses: np.ndarray,
+    est,
+    steps_per_epoch: int,
+    cache_policy: str = "none",
+    cache_budget: int = 0,
+) -> dict:
+    """Serialize one DistDGL result (shared by the study grid and the CLI)."""
     return {
         "graph": graph_key, "method": method, "k": k,
         "model": spec.model, "feature": spec.feature_dim,
         "hidden": spec.hidden_dim, "layers": spec.num_layers,
-        "batch": global_batch,
-        "edge_cut": rec.metrics.edge_cut,
-        "vertex_balance": rec.metrics.vertex_balance,
-        "train_vertex_balance": rec.metrics.train_vertex_balance,
-        "partition_time": rec.partition_time,
+        "batch": batch,
+        "edge_cut": metrics.edge_cut,
+        "vertex_balance": metrics.vertex_balance,
+        "train_vertex_balance": metrics.train_vertex_balance,
+        "partition_time": partition_time,
         "input_vertices": float(inputs.mean()),
         "input_vertex_balance": float(inputs.max() / max(inputs.mean(), 1e-9)),
         "remote_vertices": float(remote.sum()),
@@ -292,6 +374,150 @@ def minibatch_row(
             / max((est.sample_time + est.fetch_time + est.compute_time).mean(), 1e-12)
         ),
     }
+
+
+# ---------------------------------------------------------------------------
+# Serving-side study rows (layer-wise inference + micro-batched requests)
+# ---------------------------------------------------------------------------
+
+
+def serve_result_row(
+    graph_key: str,
+    method: str,
+    k: int,
+    spec: GNNSpec,
+    report,
+    *,
+    qps: float,
+    hops: int,
+    fanout: int,
+    max_batch: int,
+    max_wait: float,
+    cache_policy: str = "none",
+    cache_budget: int = 0,
+    partition_time: float = 0.0,
+    partition_quality: Optional[float] = None,
+) -> dict:
+    """Serialize one serving run (shared by `launch/gnn_serve.py --out-json`
+    and `benchmarks/fig_serving.py`). `report` is a
+    `repro.serve.ServingReport`; `partition_quality` is the regime's scalar
+    (edge-cut for vertex partitions, replication factor for edge
+    partitions)."""
+    fetch = report.fetch
+    return {
+        "graph": graph_key, "method": method, "k": k,
+        "model": spec.model, "feature": spec.feature_dim,
+        "hidden": spec.hidden_dim, "layers": spec.num_layers,
+        "regime": "serve",
+        "qps_offered": float(qps),
+        "hops": int(hops), "fanout": int(fanout),
+        "max_batch": int(max_batch), "max_wait": float(max_wait),
+        "cache_policy": cache_policy, "cache_budget": int(cache_budget),
+        "partition_time": partition_time,
+        "partition_quality": partition_quality,
+        "requests": report.served(),
+        "batches": int(report.batch_size.shape[0]),
+        "latency_p50": report.p50(),
+        "latency_p99": report.p99(),
+        "latency_mean": float(report.latency.mean()),
+        "service_mean": float(report.service_time.mean()),
+        "host_mean": float(report.host_time.mean()),
+        "qps_sustainable": report.sustainable_qps(),
+        "qps_per_worker": [report.sustainable_qps(w) for w in range(report.k)],
+        "p99_per_worker": [r["p99"] for r in report.worker_rows()],
+        "remote_vertices": fetch.num_remote,
+        "cache_hits": fetch.num_cache_hit,
+        "remote_misses": fetch.num_remote_miss,
+        "hit_rate": fetch.hit_rate,
+        "miss_bytes": fetch.miss_bytes,
+    }
+
+
+def serve_row(
+    graph_key: str,
+    method: str,
+    k: int,
+    spec: GNNSpec,
+    *,
+    scale: float = 0.03,
+    seed: int = 0,
+    qps: float = 200.0,
+    n_requests: int = 240,
+    hops: int = 1,
+    fanout: int = 10,
+    max_batch: int = 32,
+    max_wait: float = 5e-4,
+    cache_policy: str = "none",
+    cache_budget: int = 0,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+    cache: Optional[StudyCache] = None,
+) -> dict:
+    """One serving study row: REAL layer-wise inference + request simulation
+    on the real partition, cost-model cluster latencies.
+
+    `method` may be a vertex partitioner (the embedding store shards by it
+    directly) or an edge partitioner (the store shards by the edge book's
+    masters). Layer-wise embeddings are memoised per (graph, method, k,
+    spec, seed) — the policy x budget x qps grid reuses them, exactly like
+    partitions are reused across the training grid.
+    """
+    from repro.core.partition_book import build_vertex_book
+    from repro.gnn.inference import (
+        LayerwiseInference,
+        edge_assignment_from_vertex,
+    )
+    from repro.gnn.models import init_params
+    from repro.serve import build_serving, run_serving_sim
+
+    cache = cache or _GLOBAL_CACHE
+    g = cache.graph(graph_key, scale, 0)
+    # names shared by both regimes (e.g. "random") resolve as VERTEX
+    # partitioners — the embedding store shards by vertex ownership
+    if method in VERTEX_METHODS or method not in EDGE_METHODS:
+        rec = cache.vertex_partition(g, method, k, seed)
+        owner = rec.assignment
+        edge_assignment = edge_assignment_from_vertex(g, owner)
+        quality = rec.metrics.edge_cut
+    else:
+        rec = cache.edge_partition(g, method, k, seed)
+        edge_assignment = rec.assignment
+        owner = rec.book.master_assignment()
+        quality = rec.metrics.replication_factor
+
+    memo = getattr(cache, "_serve_embeddings", None)
+    if memo is None:
+        memo = cache._serve_embeddings = {}
+    # layer-wise inference == the full-batch forward for ANY partition
+    # (tested per backend), so the embeddings are partition-invariant:
+    # one pass per (graph, spec, seed) serves every (method, k) cell
+    key = (id(g), spec, seed)
+    if key not in memo:
+        rng = np.random.default_rng(seed)
+        feats = rng.normal(size=(g.num_vertices, spec.feature_dim))
+        params = init_params(spec, seed=seed)
+        eng = LayerwiseInference.build(
+            g, edge_assignment, k, spec, params, feats.astype(np.float32))
+        memo[key] = (params, eng.run())
+    params, embeddings = memo[key]
+
+    vbook = build_vertex_book(g, owner, k)
+    engines, batchers, _ = build_serving(
+        g, vbook, spec, params, embeddings,
+        hops=hops, fanout=fanout, max_batch=max_batch, max_wait=max_wait,
+        cache_policy=cache_policy, cache_budget=cache_budget, seed=seed,
+    )
+    rng = np.random.default_rng(seed + 99)
+    request_ids = rng.integers(0, g.num_vertices, n_requests)
+    arrivals = np.sort(rng.uniform(0.0, n_requests / qps, n_requests))
+    report = run_serving_sim(engines, batchers, owner, request_ids, arrivals,
+                             cluster=cluster)
+    return serve_result_row(
+        graph_key, method, k, spec, report,
+        qps=qps, hops=hops, fanout=fanout, max_batch=max_batch,
+        max_wait=max_wait, cache_policy=cache_policy,
+        cache_budget=cache_budget, partition_time=rec.partition_time,
+        partition_quality=quality,
+    )
 
 
 def minibatch_speedup(rows: Iterable[dict]) -> list[dict]:

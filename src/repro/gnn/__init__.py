@@ -2,5 +2,6 @@ from repro.gnn.feature_store import (  # noqa: F401
     CACHE_POLICIES,
     FeatureStore,
     FetchStats,
+    RowStore,
 )
 from repro.gnn.models import GNNSpec, init_params  # noqa: F401

@@ -1,4 +1,4 @@
-"""Per-worker distributed feature store with pluggable static caching.
+"""Partitioned row stores: owner shards + per-worker static caches.
 
 The paper's DistDGL analysis (§5.1, Figs. 16-19) shows that *feature loading
 of remote input vertices* is the dominant, partitioning-sensitive cost of
@@ -7,9 +7,17 @@ remote vertex features (PaGraph, BGL, DistDGL's node-feature cache): the
 cache is populated once from static graph information, and every mini-batch
 lookup is served from {local shard, cache, remote fetch}.
 
-This module reproduces that layer. Each worker w of a
-`VertexPartitionBook` owns its partition's feature rows; on top it holds a
-bounded static cache of remote vertices selected by one of four policies:
+This module reproduces that layer, generalised: `RowStore` is a partitioned
+store of arbitrary [V, d] rows keyed by vertex id — feature rows during
+training AND per-layer embedding rows during layer-wise inference serving
+(gnn/inference.py) share the same lookup/split/accounting machinery, because
+at serving time the partitioning-sensitive cost is the same mechanism:
+remote rows crossing the network. `FeatureStore` is the feature-flavored
+front (unchanged public API).
+
+Each worker w of a `VertexPartitionBook` owns its partition's rows; on top
+it holds a bounded static cache of remote vertices selected by one of four
+policies:
 
   none    — no cache (DistDGL default; every remote vertex crosses the net)
   random  — uniform random remote vertices (ablation baseline)
@@ -19,13 +27,13 @@ bounded static cache of remote vertices selected by one of four policies:
             partition, ranked by how many cut edges bind them to w (the
             vertices sampling is most likely to touch first)
 
-`lookup()` splits a sampled batch's input vertices into
-{local, cache-hit, remote-miss} with one vectorised pass and returns the
-assembled feature block plus a `FetchStats` record (counts and bytes per
-class). Only *miss* bytes cross the network — `core/cost_model.py` prices
-the feature-loading phase from them. Note the asymmetry with sampling:
-caching features does NOT cache adjacency, so remote-adjacency sampling
-costs still scale with all remote vertices.
+`gather()` splits a batch's input vertices into {local, cache-hit,
+remote-miss} with one vectorised pass and returns the assembled row block
+plus a `FetchStats` record (counts and bytes per class). Only *miss* bytes
+cross the network — `core/cost_model.py` prices the feature-loading phase
+(`minibatch_step`) and the serving fetch phase (`serve_request`) from them.
+Note the asymmetry with sampling: caching rows does NOT cache adjacency, so
+remote-adjacency sampling costs still scale with all remote vertices.
 
 Budgets are vertices per worker (`cache_budget`); `halo` may under-fill its
 budget when the boundary is smaller than the budget — that is the policy's
@@ -42,7 +50,13 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
 
-__all__ = ["CACHE_POLICIES", "FetchStats", "FeatureStore", "select_cache_vertices"]
+__all__ = [
+    "CACHE_POLICIES",
+    "FetchStats",
+    "FeatureStore",
+    "RowStore",
+    "select_cache_vertices",
+]
 
 CACHE_POLICIES = ("none", "random", "degree", "halo")
 
@@ -126,66 +140,89 @@ def select_cache_vertices(
 
 
 @dataclasses.dataclass(frozen=True)
-class FeatureStore:
-    """Distributed feature store: owner shards + per-worker static caches.
+class RowStore:
+    """Generic partitioned row store: owner shards + per-worker static caches.
 
-    `features` (the global [V, F] array) doubles as the union of owner
-    shards and as the remote KV store for misses; cache hits are served from
-    `cache_rows`, the feature copies frozen at build time — so a stale cache
-    would be *observable*, not silently papered over.
+    `rows` (the global [V, d] array) doubles as the union of owner shards
+    and as the remote KV store for misses; cache hits are served from
+    `cache_rows`, the copies frozen at build time — so a stale cache would
+    be *observable*, not silently papered over. What the rows *are* is the
+    caller's business: features (`FeatureStore`) or per-layer embeddings
+    (gnn/inference.py's embedding stores).
     """
 
     book: VertexPartitionBook
     policy: str
     budget: int
-    feature_dim: int
+    row_dim: int
     bytes_per_row: int
     # Per-worker caches as SORTED id arrays (membership via searchsorted) —
     # O(sum cache sizes) memory, not O(k * V). cache_rows is aligned with
     # cache_ids, so the searchsorted position doubles as the row index.
     cache_ids: np.ndarray           # int64 [k, max_cache]; pad -> num_vertices
     cache_sizes: np.ndarray         # int64 [k]: true cache entries per worker
-    cache_rows: Optional[np.ndarray]  # [k, max_cache, F] cached copies
-    features: Optional[np.ndarray]    # global [V, F] (None = accounting-only)
+    cache_rows: Optional[np.ndarray]  # [k, max_cache, d] cached copies
+    rows: Optional[np.ndarray]        # global [V, d] (None = accounting-only)
 
     @classmethod
-    def build(
+    def create(
+        cls,
+        book: VertexPartitionBook,
+        cache_vertices: "list[np.ndarray]",
+        *,
+        rows: Optional[np.ndarray] = None,
+        row_dim: Optional[int] = None,
+        policy: str = "none",
+        budget: int = 0,
+    ) -> "RowStore":
+        """Build a store whose worker-w cache holds `cache_vertices[w]`.
+
+        With `rows=None` the store is accounting-only (split/stats work,
+        gather does not) — `row_dim` then sizes the byte metrics. The cache
+        selection is the caller's (e.g. `select_cache_vertices`), so one
+        selection can be shared across many stores — the per-layer embedding
+        stores reuse a single policy computation.
+        """
+        if rows is not None:
+            row_dim = int(rows.shape[1])
+        if row_dim is None:
+            raise ValueError("need rows or row_dim for byte accounting")
+        ids = [np.sort(np.asarray(c, dtype=np.int64)) for c in cache_vertices]
+        sizes = np.array([c.shape[0] for c in ids], dtype=np.int64)
+        max_cache = int(sizes.max()) if sizes.size else 0
+        # pad with num_vertices: sorts after every real id, never matches one
+        cache_ids = np.full((book.k, max_cache), book.num_vertices, dtype=np.int64)
+        crows = None
+        if rows is not None:
+            crows = np.zeros((book.k, max_cache, row_dim), dtype=rows.dtype)
+        for w, cw in enumerate(ids):
+            cache_ids[w, : cw.shape[0]] = cw
+            if crows is not None:
+                crows[w, : cw.shape[0]] = rows[cw]
+        return cls(
+            book=book, policy=policy, budget=int(budget),
+            row_dim=row_dim, bytes_per_row=4 * row_dim,
+            cache_ids=cache_ids, cache_sizes=sizes, cache_rows=crows,
+            rows=rows,
+        )
+
+    @classmethod
+    def from_policy(
         cls,
         graph: Graph,
         book: VertexPartitionBook,
         *,
         policy: str = "none",
         budget: int = 0,
-        features: Optional[np.ndarray] = None,
-        feature_dim: Optional[int] = None,
+        rows: Optional[np.ndarray] = None,
+        row_dim: Optional[int] = None,
         seed: int = 0,
-    ) -> "FeatureStore":
-        """Build the store. With `features=None` the store is accounting-only
-        (split/stats work, gather does not) — `feature_dim` then sizes the
-        byte metrics."""
-        if features is not None:
-            feature_dim = int(features.shape[1])
-        if feature_dim is None:
-            raise ValueError("need features or feature_dim for byte accounting")
+    ) -> "RowStore":
+        """Select the per-worker caches with `select_cache_vertices`, then
+        `create` (which subclasses do NOT override, unlike `build`)."""
         ids = select_cache_vertices(graph, book, policy, budget, seed=seed)
-        ids = [np.sort(c) for c in ids]
-        sizes = np.array([c.shape[0] for c in ids], dtype=np.int64)
-        max_cache = int(sizes.max()) if sizes.size else 0
-        # pad with num_vertices: sorts after every real id, never matches one
-        cache_ids = np.full((book.k, max_cache), book.num_vertices, dtype=np.int64)
-        rows = None
-        if features is not None:
-            rows = np.zeros((book.k, max_cache, feature_dim), dtype=features.dtype)
-        for w, cw in enumerate(ids):
-            cache_ids[w, : cw.shape[0]] = cw
-            if rows is not None:
-                rows[w, : cw.shape[0]] = features[cw]
-        return cls(
-            book=book, policy=policy, budget=int(budget),
-            feature_dim=feature_dim, bytes_per_row=4 * feature_dim,
-            cache_ids=cache_ids, cache_sizes=sizes, cache_rows=rows,
-            features=features,
-        )
+        return cls.create(book, ids, rows=rows, row_dim=row_dim,
+                          policy=policy, budget=budget)
 
     def cached_ids(self, worker: int) -> np.ndarray:
         """Global ids cached at `worker` (sorted, cache-row order)."""
@@ -218,15 +255,52 @@ class FeatureStore:
         return self._stats_of(ids, *self.split(worker, ids))
 
     def gather(self, worker: int, ids: np.ndarray) -> tuple[np.ndarray, FetchStats]:
-        """Assemble the feature block for `ids` from shard/cache/remote and
+        """Assemble the row block for `ids` from shard/cache/remote and
         return it with the phase accounting."""
-        if self.features is None:
-            raise ValueError("accounting-only store (built without features)")
+        if self.rows is None:
+            raise ValueError("accounting-only store (built without rows)")
         ids = np.asarray(ids, dtype=np.int64)
         local, hit, miss = self.split(worker, ids)
-        out = np.empty((ids.shape[0], self.feature_dim), dtype=self.features.dtype)
-        out[local] = self.features[ids[local]]                      # owner shard
+        out = np.empty((ids.shape[0], self.row_dim), dtype=self.rows.dtype)
+        out[local] = self.rows[ids[local]]                          # owner shard
         slot = np.searchsorted(self.cached_ids(worker), ids[hit])
         out[hit] = self.cache_rows[worker, slot]
-        out[miss] = self.features[ids[miss]]                        # remote fetch
+        out[miss] = self.rows[ids[miss]]                            # remote fetch
         return out, self._stats_of(ids, local, hit, miss)
+
+
+class FeatureStore(RowStore):
+    """Feature-flavored `RowStore` (the DistDGL feature-loading phase).
+
+    Same store, same accounting — kept as its own name so training code and
+    its knobs read as features, and so the pre-RowStore public API
+    (`features`/`feature_dim`, graph-first `build`) stays intact.
+    """
+
+    @classmethod
+    def build(
+        cls,
+        graph: Graph,
+        book: VertexPartitionBook,
+        *,
+        policy: str = "none",
+        budget: int = 0,
+        features: Optional[np.ndarray] = None,
+        feature_dim: Optional[int] = None,
+        seed: int = 0,
+    ) -> "FeatureStore":
+        """Build the store. With `features=None` the store is accounting-only
+        (split/stats work, gather does not) — `feature_dim` then sizes the
+        byte metrics."""
+        return cls.from_policy(
+            graph, book, policy=policy, budget=budget,
+            rows=features, row_dim=feature_dim, seed=seed,
+        )
+
+    @property
+    def features(self) -> Optional[np.ndarray]:
+        return self.rows
+
+    @property
+    def feature_dim(self) -> int:
+        return self.row_dim

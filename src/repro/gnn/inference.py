@@ -1,0 +1,192 @@
+"""Distributed layer-wise full-graph GNN inference (the serving substrate).
+
+Training samples neighborhoods because a k-hop receptive field explodes;
+inference over *all* vertices does not need to: computing every vertex's
+layer-l embedding before any layer-(l+1) embedding touches each edge exactly
+once per layer — the standard layer-wise trick (DGL's
+`inference()` idiom, PinSAGE's MapReduce stage). Distribution reuses the
+training substrate unchanged:
+
+  * the graph is partitioned by the existing `EdgePartitionBook`; each
+    partition runs the per-device layer functions from `gnn/models.py`
+    (aggregating through `kernels.ops.aggregate`, so the tiled/pallas
+    backends run scatter-free) with halo exchange via `gnn/sync.py` —
+    so layer-wise inference == the full-batch forward, allclose, by
+    construction (tested per backend);
+  * after each layer the master rows are gathered into a global [V, d_l]
+    embedding matrix and frozen into a `RowStore` (feature_store.py) — the
+    per-layer **embedding store** that the online serving path
+    (`repro.serve`) answers requests from, with the same
+    {local, cache-hit, remote-miss} accounting and cache policies as the
+    training-time feature store.
+
+The engine is offline/batch (run once per model snapshot, amortised over
+millions of requests); `repro.serve.engine` is the online half.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition_book import (
+    EdgePartitionBook,
+    VertexPartitionBook,
+    build_edge_book,
+    build_vertex_book,
+)
+from repro.gnn import models
+from repro.gnn.feature_store import RowStore, select_cache_vertices
+from repro.gnn.models import GNNSpec
+from repro.gnn.sync import Block, build_blocks, make_sync, sync_bytes_per_round
+
+AXIS = "parts"
+
+__all__ = [
+    "LayerwiseInference",
+    "build_embedding_stores",
+    "edge_assignment_from_vertex",
+]
+
+
+def edge_assignment_from_vertex(graph: Graph, owner: np.ndarray) -> np.ndarray:
+    """Edge partition induced by a vertex partition: each edge lives with its
+    destination's owner (DistDGL's convention), so the layer-wise engine can
+    run over graphs that were partitioned for the mini-batch regime."""
+    return np.asarray(owner, dtype=np.int64)[graph.dst]
+
+
+@dataclasses.dataclass
+class LayerwiseInference:
+    """Compute all layer-l embeddings for every vertex before layer l+1.
+
+    One jitted step per layer (vmap over the k stacked partition blocks, or
+    the bare block for k=1 — same wrapping as `FullBatchTrainer`); between
+    layers the completed states stay on device, and the master rows of each
+    layer are gathered host-side into the global [V, d_l] matrices that the
+    embedding stores are built from.
+    """
+
+    spec: GNNSpec
+    book: EdgePartitionBook
+    blocks: Block
+    params: Any
+    sync_mode: str = "halo"
+    # measured by the last run(): seconds per layer, host wall clock
+    layer_times: Optional[list] = None
+
+    @classmethod
+    def build(
+        cls,
+        graph: Graph,
+        edge_assignment: np.ndarray,
+        k: int,
+        spec: GNNSpec,
+        params: Any,
+        features: np.ndarray,
+        *,
+        sync_mode: str = "halo",
+    ) -> "LayerwiseInference":
+        book = build_edge_book(
+            graph, edge_assignment, k,
+            tiled_layout=(spec.agg_backend != "scatter"),
+        )
+        zeros = np.zeros(graph.num_vertices, dtype=np.int32)
+        blocks = build_blocks(book, features.astype(np.float32), zeros,
+                              zeros.astype(bool))
+        return cls(spec=spec, book=book, blocks=blocks, params=params,
+                   sync_mode=sync_mode)
+
+    # ------------------------------------------------------------------ jit
+    @functools.cached_property
+    def _layer_steps(self) -> list:
+        """One jitted (params_l, states, blocks) -> states function per
+        layer. Compiled lazily on first use; static across runs."""
+        spec, book, sync_mode = self.spec, self.book, self.sync_mode
+        layer_fn = models._LAYERS[spec.model]
+        n_layers = spec.num_layers
+
+        def make(li: int):
+            final = li == n_layers - 1
+
+            def per_device(p, x, blk: Block):
+                mode = "local" if book.k == 1 else sync_mode
+                sync = make_sync(mode, blk, book.num_vertices, AXIS)
+                h = layer_fn(p, x, blk, sync, final=final,
+                             backend=spec.agg_backend)
+                # dummy row must stay zero: it is a scatter sink for padding
+                return h.at[-1].set(0.0)
+
+            if book.k == 1:
+                def single(p, states, blocks):
+                    blk = jax.tree.map(lambda a: a[0], blocks)
+                    return per_device(p, states[0], blk)[None]
+                return jax.jit(single)
+            return jax.jit(jax.vmap(per_device, in_axes=(None, 0, 0),
+                                    axis_name=AXIS))
+
+        return [make(li) for li in range(n_layers)]
+
+    # ------------------------------------------------------------------ api
+    def run(self) -> list:
+        """Full layer-wise pass. Returns the per-layer global embedding
+        matrices [V, d_l] (layer outputs, input-side first; the last entry
+        is the final-layer logits)."""
+        states = self.blocks.x  # [k, Vloc+1, F]
+        outs: list[np.ndarray] = []
+        times: list[float] = []
+        for li, step in enumerate(self._layer_steps):
+            t0 = time.perf_counter()
+            states = step(self.params["layers"][li], states, self.blocks)
+            states.block_until_ready()
+            times.append(time.perf_counter() - t0)
+            outs.append(self.book.scatter_to_global(np.asarray(states)))
+        self.layer_times = times
+        return outs
+
+    def sync_bytes(self) -> int:
+        """Analytic halo traffic of one full layer-wise pass (forward only —
+        inference has no backward): syncs/layer x per-round volume."""
+        syncs_per_layer = 3 if self.spec.model == "gat" else 1
+        return sum(
+            syncs_per_layer * sync_bytes_per_round(self.book, d_out,
+                                                   self.sync_mode)
+            for _, d_out in self.spec.dims()
+        )
+
+
+def build_embedding_stores(
+    graph: Graph,
+    book: VertexPartitionBook,
+    embeddings: list,
+    *,
+    policy: str = "none",
+    budget: int = 0,
+    seed: int = 0,
+) -> list:
+    """Freeze per-layer embeddings into `RowStore`s sharded by `book`.
+
+    The cache-vertex selection (same four policies as the feature store) is
+    computed ONCE from static graph information and shared by every layer's
+    store — at serving time a vertex that is worth caching is worth caching
+    at every layer it is read from.
+    """
+    ids = select_cache_vertices(graph, book, policy, budget, seed=seed)
+    return [
+        RowStore.create(book, ids, rows=np.asarray(h, dtype=np.float32),
+                        policy=policy, budget=budget)
+        for h in embeddings
+    ]
+
+
+def vertex_book_for(graph: Graph, book: EdgePartitionBook) -> VertexPartitionBook:
+    """The vertex-partition book induced by an edge partition's masters —
+    the sharding the serving path uses when training partitioned edges."""
+    return build_vertex_book(graph, book.master_assignment(), book.k)

@@ -148,15 +148,29 @@ def _mb_gat_layer(p, h_src, lay, n_dst: int, *, final: bool,
 _MB_LAYERS = {"sage": _mb_sage_layer, "gcn": _mb_gcn_layer, "gat": _mb_gat_layer}
 
 
+def mfg_forward(spec: GNNSpec, layer_params: Sequence, batch,
+                layer_sizes: Sequence[int]) -> jnp.ndarray:
+    """Forward one padded MFG stack through `layer_params`.
+
+    `layer_params` may be a SUFFIX of the model's layers — the serving
+    engine (repro.serve) recomputes only the last `hops` layers on top of
+    stored layer-wise embeddings, so `batch["x"]` is then embedding rows,
+    not feature rows. The stack always ends at the model's true final layer,
+    so the final (no-activation) flag is simply the last entry.
+    """
+    h = batch["x"]
+    layer_fn = _MB_LAYERS[spec.model]
+    L = len(layer_params)
+    for li, p in enumerate(layer_params):
+        h = layer_fn(p, h, batch["layers"][li], layer_sizes[li],
+                     final=(li == L - 1), backend=spec.agg_backend)
+    return h
+
+
 def minibatch_loss(spec: GNNSpec, params, batch, layer_sizes: Sequence[int],
                    axis: Optional[str] = AXIS) -> jnp.ndarray:
     """Per-worker loss on one padded MFG stack (psum-averaged over workers)."""
-    h = batch["x"]
-    layer_fn = _MB_LAYERS[spec.model]
-    L = len(params["layers"])
-    for li, p in enumerate(params["layers"]):
-        h = layer_fn(p, h, batch["layers"][li], layer_sizes[li],
-                     final=(li == L - 1), backend=spec.agg_backend)
+    h = mfg_forward(spec, params["layers"], batch, layer_sizes)
     logits = h[: batch["seed_labels"].shape[0]]
     logp = jax.nn.log_softmax(logits, axis=-1)
     labels = jnp.maximum(batch["seed_labels"], 0)

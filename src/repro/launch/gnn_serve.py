@@ -1,0 +1,164 @@
+"""The serving driver: partition, layer-wise-infer, then serve traffic.
+
+The full serving stack on one command line: partition a graph (edge OR
+vertex partitioner — the embedding store shards by masters resp. owners),
+run the distributed layer-wise inference engine to materialise the
+per-layer embedding stores (gnn/inference.py), then drive a Poisson request
+trace through the micro-batched online path (repro.serve) and report
+per-worker p50/p99 latency and sustainable QPS on the paper's cluster.
+
+  PYTHONPATH=src python -m repro.launch.gnn_serve --graph OR --scale 0.05 \
+      --partitioner hep100 --k 4 --model sage --qps 100 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import study
+from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
+from repro.core.graph import paper_graph
+from repro.core.metrics import edge_partition_metrics, vertex_partition_metrics
+from repro.core.partition_book import build_vertex_book
+from repro.core.vertex_partition import VERTEX_PARTITIONERS, partition_vertices
+from repro.gnn.feature_store import CACHE_POLICIES
+from repro.gnn.inference import (
+    LayerwiseInference,
+    edge_assignment_from_vertex,
+)
+from repro.gnn.models import GNNSpec, init_params
+from repro.serve import build_serving, run_serving_sim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="OR", choices=["HO", "DI", "EN", "EU", "OR"])
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--partitioner", default="hep100",
+                    help="edge partitioner (store shards by masters) or "
+                         "vertex partitioner (store shards by owners)")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--model", default="sage", choices=["sage", "gcn", "gat"])
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--classes", type=int, default=16)
+    ap.add_argument("--agg-backend", default="scatter",
+                    choices=["scatter", "tiled", "pallas"])
+    ap.add_argument("--qps", type=float, default=100.0,
+                    help="offered load (Poisson arrivals, whole cluster)")
+    ap.add_argument("--requests", type=int, default=1000,
+                    help="length of the simulated request trace")
+    ap.add_argument("--hops", type=int, default=1,
+                    help="final layers recomputed per request (1..layers-1); "
+                         "the rest is read from the embedding store")
+    ap.add_argument("--fanout", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=32,
+                    help="micro-batch size cap")
+    ap.add_argument("--max-wait", type=float, default=5e-4,
+                    help="seconds a request may wait for its micro-batch")
+    ap.add_argument("--cache-policy", default="none",
+                    choices=list(CACHE_POLICIES))
+    ap.add_argument("--cache-budget", type=int, default=0,
+                    help="cached remote embedding rows per worker")
+    ap.add_argument("--out-json", default="",
+                    help="write the study-format serving row here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-fast: trim the request trace")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 200)
+
+    g = paper_graph(args.graph, scale=args.scale, seed=0)
+    print(f"[serve] graph {args.graph}: {g.num_vertices} vertices, "
+          f"{g.num_edges} edges")
+    spec = GNNSpec(model=args.model, feature_dim=args.features,
+                   hidden_dim=args.hidden, num_classes=args.classes,
+                   num_layers=args.layers, agg_backend=args.agg_backend)
+    rng = np.random.default_rng(args.seed)
+    feats = rng.normal(size=(g.num_vertices, args.features)).astype(np.float32)
+    params = init_params(spec, seed=args.seed)
+
+    # ---------------------------------------------------------- partition
+    t0 = time.perf_counter()
+    if args.partitioner in EDGE_PARTITIONERS:
+        edge_assignment = partition_edges(g, args.k, args.partitioner,
+                                          seed=args.seed)
+        pt = time.perf_counter() - t0
+        m = edge_partition_metrics(g, edge_assignment, args.k)
+        quality = m.replication_factor
+        print(f"[serve] edge-partitioned in {pt:.2f}s: "
+              f"rf={m.replication_factor:.2f} edge_bal={m.edge_balance:.2f}")
+        owner = None  # derived from masters below
+    else:
+        assert args.partitioner in VERTEX_PARTITIONERS, (
+            f"unknown partitioner {args.partitioner!r}; edge options "
+            f"{sorted(EDGE_PARTITIONERS)}, vertex options "
+            f"{sorted(VERTEX_PARTITIONERS)}")
+        owner = partition_vertices(g, args.k, args.partitioner, seed=args.seed)
+        pt = time.perf_counter() - t0
+        m = vertex_partition_metrics(g, owner, args.k)
+        quality = m.edge_cut
+        print(f"[serve] vertex-partitioned in {pt:.2f}s: "
+              f"edge_cut={m.edge_cut:.3f} vertex_bal={m.vertex_balance:.2f}")
+        edge_assignment = edge_assignment_from_vertex(g, owner)
+
+    # ------------------------------------------- layer-wise embedding pass
+    engine = LayerwiseInference.build(
+        g, edge_assignment, args.k, spec, params, feats)
+    embeddings = engine.run()
+    if owner is None:
+        owner = engine.book.master_assignment()
+    vbook = build_vertex_book(g, owner, args.k)
+    dims = "/".join(str(e.shape[1]) for e in embeddings)
+    print(f"[serve] layer-wise inference: {len(embeddings)} layers "
+          f"(dims {dims}) in {sum(engine.layer_times):.2f}s host, "
+          f"halo traffic {engine.sync_bytes()/2**20:.1f} MiB/pass")
+
+    # ------------------------------------------------------- online serving
+    engines, batchers, store = build_serving(
+        g, vbook, spec, params, embeddings,
+        hops=args.hops, fanout=args.fanout, max_batch=args.batch,
+        max_wait=args.max_wait, cache_policy=args.cache_policy,
+        cache_budget=args.cache_budget, seed=args.seed,
+    )
+    if args.cache_budget:
+        print(f"[serve] embedding cache: policy={args.cache_policy} "
+              f"budget={args.cache_budget}/worker "
+              f"(filled {store.cache_sizes.tolist()})")
+    request_ids = rng.integers(0, g.num_vertices, args.requests)
+    arrivals = np.sort(rng.uniform(0.0, args.requests / args.qps,
+                                   args.requests))
+    report = run_serving_sim(engines, batchers, owner, request_ids, arrivals)
+
+    for row in report.worker_rows():
+        print(f"[serve] worker {row['worker']}: served {row['served']:5d}  "
+              f"p50 {row['p50']*1e3:7.2f} ms  p99 {row['p99']*1e3:7.2f} ms  "
+              f"sustainable {row['qps_sustainable']:8.0f} qps")
+    print(f"[serve] cluster: offered {args.qps:.0f} qps, served "
+          f"{report.served()} requests in {report.duration:.2f}s  "
+          f"p50 {report.p50()*1e3:.2f} ms  p99 {report.p99()*1e3:.2f} ms  "
+          f"sustainable {report.sustainable_qps():.0f} qps/cluster")
+    print(f"[serve] store traffic: hit_rate {report.fetch.hit_rate:.2f}  "
+          f"miss {report.fetch.miss_bytes/2**20:.2f} MiB  "
+          f"host compute p50 {np.percentile(report.host_time, 50)*1e3:.2f} "
+          f"ms/batch")
+
+    if args.out_json:
+        row = study.serve_result_row(
+            args.graph, args.partitioner, args.k, spec, report,
+            qps=args.qps, hops=args.hops, fanout=args.fanout,
+            max_batch=args.batch, max_wait=args.max_wait,
+            cache_policy=args.cache_policy, cache_budget=args.cache_budget,
+            partition_time=pt, partition_quality=quality,
+        )
+        study.write_rows([row], args.out_json)
+        print(f"[serve] wrote study row -> {args.out_json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import cost_model
+from repro.core import cost_model, study
 from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
 from repro.core.graph import paper_graph
 from repro.core.metrics import edge_partition_metrics, vertex_partition_metrics
@@ -55,6 +55,10 @@ def main() -> None:
                     help="per-worker remote-feature cache policy (minibatch)")
     ap.add_argument("--cache-budget", type=int, default=0,
                     help="cached remote vertices per worker (minibatch)")
+    ap.add_argument("--out-json", default="",
+                    help="write the run's study-format row(s) here "
+                         "(core/study.py serializers — same format the "
+                         "benchmark drivers emit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -88,11 +92,19 @@ def main() -> None:
               f"comm {est.comm_bytes.sum()/2**20:.1f} MiB, "
               f"mem max {est.memory.max()/2**20:.1f} MiB"
               + (" (OOM!)" if est.oom else ""))
+        loss = float("nan")
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
             loss = tr.train_step()
             print(f"[gnn] epoch {epoch:3d} loss {loss:.4f} "
                   f"({time.perf_counter()-t1:.2f}s)")
+        if args.out_json:
+            row = study.fullbatch_result_row(
+                args.graph, args.partitioner, args.k, spec,
+                metrics=m, partition_time=pt, est=est)
+            row["loss"] = loss
+            study.write_rows([row], args.out_json)
+            print(f"[gnn] wrote study row -> {args.out_json}")
     else:
         assert args.partitioner in VERTEX_PARTITIONERS, (
             f"mini-batch (DistDGL) uses vertex partitioners: "
@@ -113,11 +125,14 @@ def main() -> None:
                   f"budget={args.cache_budget}/worker "
                   f"(filled {tr.store.cache_sizes.tolist()})")
         steps_per_epoch = max(int(train_mask.sum()) // args.batch, 1)
+        sms, losses = [], []
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
             losses, remotes, hit_rates = [], [], []
+            sms = []
             for _ in range(steps_per_epoch):
                 sm = tr.train_step()
+                sms.append(sm)
                 losses.append(sm.loss)
                 remotes.append(sm.remote_vertices.sum())
                 hit_rates.append(sm.hit_rate)
@@ -131,6 +146,32 @@ def main() -> None:
                   f"hit_rate {np.mean(hit_rates):.2f} "
                   f"cluster step est {est.step_time*1e3:.1f} ms "
                   f"({time.perf_counter()-t1:.2f}s)")
+        if args.out_json and not sms:
+            print("[gnn] --out-json needs at least one trained epoch; "
+                  "no row written")
+        elif args.out_json:
+            # average the LAST epoch's measured per-worker metrics (same
+            # aggregation as study.minibatch_row) and re-estimate from them
+            inputs = np.stack([s.input_vertices for s in sms]).mean(axis=0)
+            remote = np.stack([s.remote_vertices for s in sms]).mean(axis=0)
+            edges = np.stack([s.edges for s in sms]).mean(axis=0)
+            hits = np.stack([s.cache_hits for s in sms]).mean(axis=0)
+            misses = np.stack([s.remote_misses for s in sms]).mean(axis=0)
+            est = cost_model.minibatch_step(
+                inputs, remote, edges, tr.book.sizes, spec,
+                seeds_per_worker=max(args.batch // args.k, 1),
+                remote_miss_vertices=misses,
+                cached_vertices=tr.store.cache_sizes)
+            row = study.minibatch_result_row(
+                args.graph, args.partitioner, args.k, spec,
+                metrics=m, partition_time=pt, batch=args.batch,
+                inputs=inputs, remote=remote, hits=hits, misses=misses,
+                est=est, steps_per_epoch=steps_per_epoch,
+                cache_policy=args.cache_policy,
+                cache_budget=args.cache_budget)
+            row["loss"] = float(np.mean(losses))
+            study.write_rows([row], args.out_json)
+            print(f"[gnn] wrote study row -> {args.out_json}")
 
 
 if __name__ == "__main__":

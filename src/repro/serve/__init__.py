@@ -1,0 +1,17 @@
+"""Online GNN inference serving (the request path).
+
+`repro.gnn.inference` is the offline half: a layer-wise pass materialises
+per-layer embedding stores. This package is the online half: target-vertex
+requests are micro-batched into padded MFGs (`batcher.py`), answered from
+the embedding store plus a recompute of the final layers (`engine.py`),
+and priced on the paper's cluster by `core.cost_model.serve_request`.
+`launch/gnn_serve.py` is the driver; `benchmarks/fig_serving.py` the sweep.
+"""
+
+from repro.serve.batcher import MicroBatch, MicroBatcher  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ServeEngine,
+    ServingReport,
+    build_serving,
+    run_serving_sim,
+)
