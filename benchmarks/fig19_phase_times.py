@@ -1,36 +1,186 @@
 """Paper Fig. 19-21/23: per-phase time breakdown (sampling / feature
 loading / compute). Claims: at feature size 512 feature fetching dominates
 sampling; at small features (<=64) sampling >= fetching; on the road network
-DI sampling always dominates."""
+DI sampling always dominates.
+
+Beyond-paper section: overlapped-vs-serial MEASURED rows — the pipelined
+execution engine (gnn/pipeline.py) against the serial oracle on the same
+seed (bitwise-identical batches), reporting true per-phase wall times
+(sample / fetch / transfer / compute), overlap efficiency (hidden host time
+/ total host time) and the end-to-end step speedup. This is exactly the
+structural reason DistDGL overlaps its sampler processes with device
+compute: the host phases this figure shows dominating are hideable.
+
+`--smoke` (or `run.py --smoke`) trims the modeled grid and runs the
+measured section at the CI scale; `--out-json PATH` writes every row
+(modeled study rows + measured overlap rows) through the shared
+`study.write_rows` emitter — CI uploads the smoke JSON as an artifact.
+"""
+
+import os
+import sys
+import time
+
+import numpy as np
 
 from benchmarks.common import SCALE, cache, emit, spec
-from repro.core import cost_model
-from repro.core.study import minibatch_row
+from repro.core.study import minibatch_row, write_rows
+
+# the measured overlap bench sizes itself independently of common.SCALE so a
+# direct `python benchmarks/fig19_phase_times.py --smoke` is CI-fast
+# without env setup (same convention as roofline.py's AGG_SCALE)
+OVERLAP_SCALE = float(os.environ.get("BENCH_SCALE", "0.02"))
 
 
-def main() -> None:
+def measure_overlap(
+    scale: float = OVERLAP_SCALE,
+    *,
+    k: int = 4,
+    model: str = "sage",
+    feature: int = 64,
+    hidden: int = 32,
+    global_batch: int = 256,
+    prefetch_depth: int = 2,
+    warmup: int = 2,
+    steps: int = 6,
+) -> dict:
+    """Run the SAME (graph, partition, seed) serially and pipelined; return
+    per-mode mean measured phase times + wall, and the end-to-end speedup.
+    Shared with roofline.py's --smoke rows."""
+    from repro.core.graph import paper_graph
+    from repro.core.vertex_partition import partition_vertices
+    from repro.gnn.minibatch import MiniBatchTrainer
+    from repro.gnn.models import GNNSpec
+
+    g = paper_graph("OR", scale=scale, seed=0)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_vertices, feature)).astype(np.float32)
+    labels = rng.integers(0, 16, g.num_vertices).astype(np.int32)
+    train = rng.random(g.num_vertices) < 0.3
+    gspec = GNNSpec(model=model, feature_dim=feature, hidden_dim=hidden,
+                    num_classes=16, num_layers=2)
+    owner = partition_vertices(g, k, "metis", seed=0)
+
+    out = {"graph": "OR", "method": "metis", "k": k, "model": model,
+           "feature": feature, "hidden": hidden, "batch": global_batch,
+           "prefetch_depth": prefetch_depth, "steps": steps}
+    for mode, overlap in (("serial", False), ("pipelined", True)):
+        tr = MiniBatchTrainer.build(
+            g, owner, k, gspec, feats, labels, train,
+            global_batch=global_batch, seed=7, overlap=overlap,
+            prefetch_depth=prefetch_depth,
+        )
+        for _ in range(warmup):  # compile + fill the prefetch queue
+            tr.train_step()
+        t0 = time.perf_counter()
+        ms = [tr.train_step() for _ in range(steps)]
+        wall = (time.perf_counter() - t0) / steps
+        tr.close()
+        out[mode] = {
+            "sample": float(np.mean([m.sample_time_host for m in ms])),
+            "fetch": float(np.mean([m.fetch_time_host for m in ms])),
+            "transfer": float(np.mean([m.transfer_time_host for m in ms])),
+            "compute": float(np.mean([m.compute_time_host for m in ms])),
+            "step_wall": float(np.mean([m.step_wall_host for m in ms])),
+            "wall": wall,
+            "overlap_efficiency": float(
+                np.mean([m.overlap_efficiency for m in ms])),
+            "loss_last": ms[-1].loss,
+        }
+    out["speedup"] = out["serial"]["wall"] / out["pipelined"]["wall"]
+    # same seed => the two modes trained on identical batches
+    out["losses_identical"] = out["serial"]["loss_last"] == out["pipelined"]["loss_last"]
+    return out
+
+
+def _overlap_rows(measured: dict) -> "list[dict]":
+    """Flatten the measured dict into two study-style JSON rows."""
+    rows = []
+    for mode in ("serial", "pipelined"):
+        m = measured[mode]
+        rows.append({
+            "figure": "fig19_overlap",
+            "graph": measured["graph"], "method": measured["method"],
+            "k": measured["k"], "model": measured["model"],
+            "feature": measured["feature"], "hidden": measured["hidden"],
+            "batch": measured["batch"], "mode": mode,
+            "overlap": mode == "pipelined",
+            "prefetch_depth": (measured["prefetch_depth"]
+                               if mode == "pipelined" else 0),
+            "host_sample_time": m["sample"],
+            "host_fetch_time": m["fetch"],
+            "host_transfer_time": m["transfer"],
+            "host_compute_time": m["compute"],
+            "host_step_wall": m["wall"],
+            "overlap_efficiency": m["overlap_efficiency"],
+            "speedup_vs_serial": measured["serial"]["wall"] / m["wall"],
+        })
+    return rows
+
+
+def overlap_bench(smoke: bool) -> "list[dict]":
+    """Emit the overlapped-vs-serial rows + acceptance claims."""
+    measured = measure_overlap(OVERLAP_SCALE if smoke else max(OVERLAP_SCALE, 0.05))
+    for mode in ("serial", "pipelined"):
+        m = measured[mode]
+        extra = ("" if mode == "serial"
+                 else f";overlap_eff={m['overlap_efficiency']:.2f}")
+        emit(f"fig19.overlap.{mode}", m["wall"],
+             f"sample={m['sample']*1e3:.2f}ms;fetch={m['fetch']*1e3:.2f}ms;"
+             f"transfer={m['transfer']*1e3:.2f}ms;"
+             f"compute={m['compute']*1e3:.2f}ms{extra}")
+    s = measured["serial"]
+    phase_sum = s["sample"] + s["fetch"] + s["transfer"] + s["compute"]
+    emit("fig19.overlap.claims", 0.0,
+         f"pipelined_below_serial={measured['speedup'] > 1.0};"
+         f"speedup={measured['speedup']:.2f};"
+         f"serial_phase_sum_covers_step={phase_sum >= s['step_wall'] * (1 - 1e-9)};"
+         f"losses_identical={measured['losses_identical']}")
+    return _overlap_rows(measured)
+
+
+def main(out_json: str = "", smoke: "bool | None" = None) -> None:
+    if smoke is None:  # run.py --smoke exports BENCH_FAST=1 before importing
+        smoke = os.environ.get("BENCH_FAST") == "1"
     c = cache()
     k = 4
+    scale = min(SCALE, 0.02) if smoke else SCALE
     results = {}
+    rows = []
     # DI's phase profile in the paper reflects its very low edge-cut
     # (Fig. 13) — use metis there; EU uses a streaming partitioner.
     for gk, method in [("EU", "ldg"), ("DI", "metis")]:
         for f in (16, 512):
             r = minibatch_row(gk, method, k, spec(feature=f, layers=3),
-                              scale=SCALE, cache=c, global_batch=128, steps=2)
+                              scale=scale, cache=c, global_batch=128, steps=2)
             results[(gk, f)] = r
+            rows.append(r)
             emit(f"fig19.phases.{gk}.f{f}", 0.0,
                  f"sample={r['sample_time']*1e3:.2f}ms;"
                  f"fetch={r['fetch_time']*1e3:.2f}ms;"
-                 f"compute={r['compute_time']*1e3:.2f}ms")
+                 f"compute={r['compute_time']*1e3:.2f}ms;"
+                 f"step_overlap={r['step_time_overlap']*1e3:.2f}ms")
     big_fetch = results[("EU", 512)]
     small = results[("EU", 16)]
     di = results[("DI", 512)]
     emit("fig19.claims", 0.0,
          f"fetch_dominates_at_512={big_fetch['fetch_time'] > big_fetch['sample_time']};"
          f"sampling_matters_at_16={small['sample_time'] >= small['fetch_time'] * 0.5};"
-         f"DI_sampling_dominates={di['sample_time'] > di['fetch_time']}")
+         f"DI_sampling_dominates={di['sample_time'] > di['fetch_time']};"
+         f"overlap_model_helps={big_fetch['step_time_overlap'] < big_fetch['step_time']}")
+    rows.extend(overlap_bench(smoke))
+    if out_json:
+        write_rows(rows, out_json)
+        print(f"fig19.out_json,0.0,wrote={out_json}", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-fast: trimmed modeled grid + small measured bench")
+    ap.add_argument("--out-json", default="",
+                    help="write modeled + measured rows here (study.write_rows)")
+    args = ap.parse_args()
+    main(out_json=args.out_json, smoke=args.smoke)

@@ -3,7 +3,9 @@ single-pod 16x16 mesh, read from the dry-run cache (dryrun_results.json) —
 plus the GNN aggregation-backend bench: measured scatter-vs-tiled
 segment-reduce (sum AND max) microbench rows, and scatter-vs-tiled step time
 + aggregate traffic bytes for the full-batch (sage/gcn/gat, k in {1, 4}) and
-mini-batch (sage) trainers — gat exercises the segment-max path end to end.
+mini-batch (sage) trainers — gat exercises the segment-max path end to end —
+and the serial-vs-pipelined mini-batch step rows (the overlapped execution
+engine, gnn/pipeline.py, sharing fig19's measured bench).
 `--smoke` (or `run.py --smoke`) runs the aggregation bench at the trimmed CI
 scale; the dry-run section still needs the cache.
 """
@@ -140,6 +142,24 @@ def agg_backend_bench() -> None:
          f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
 
 
+def overlap_bench() -> None:
+    """Measured serial-vs-pipelined mini-batch step rows (the overlapped
+    execution engine, gnn/pipeline.py) — shares fig19's bench so the two
+    smoke artifacts can't drift apart."""
+    from benchmarks.fig19_phase_times import measure_overlap
+
+    m = measure_overlap(AGG_SCALE)
+    for mode in ("serial", "pipelined"):
+        r = m[mode]
+        emit(f"roofline.overlap.minibatch.sage.k{m['k']}.{mode}", r["wall"],
+             f"host={r['sample']+r['fetch']+r['transfer']:.4f}s;"
+             f"compute={r['compute']:.4f}s;"
+             f"overlap_eff={r['overlap_efficiency']:.2f}")
+    emit(f"roofline.overlap.minibatch.sage.k{m['k']}.speedup", 0.0,
+         f"serial_over_pipelined={m['speedup']:.3f};"
+         f"losses_identical={m['losses_identical']}")
+
+
 def serving_bench() -> None:
     """Measured serve-step rows (scatter vs tiled): the online micro-batch
     path — embedding-store gather + final-layer recompute through
@@ -197,6 +217,7 @@ def main() -> None:
     if smoke:
         segment_reduce_bench()
         agg_backend_bench()
+        overlap_bench()
         serving_bench()
     if not os.path.exists(RESULTS):
         emit("roofline.missing", 0.0,

@@ -243,10 +243,14 @@ def minibatch_row(
     run_device_step: bool = False,
     cache_policy: str = "none",
     cache_budget: int = 0,
+    overlap: bool = False,
+    prefetch_depth: int = 2,
 ) -> dict:
     """One DistDGL study row: REAL sampling on the real partition, cost-model
     cluster times. `run_device_step=True` additionally runs the jitted
-    data-parallel train step (slower; used by integration tests).
+    data-parallel train step (slower; used by integration tests) — then
+    `overlap`/`prefetch_depth` select the pipelined execution engine
+    (gnn/pipeline.py) and the row carries its measured host phase times.
     `cache_policy`/`cache_budget` configure the per-worker feature cache
     (gnn/feature_store.py); network fetch is then priced from cache misses."""
     from repro.gnn.feature_store import FeatureStore
@@ -257,6 +261,7 @@ def minibatch_row(
     train_mask = rng.random(g.num_vertices) < train_frac
     rec = cache.vertex_partition(g, method, k, seed, train_mask)
 
+    host_times = None
     if run_device_step:
         feats = rng.normal(size=(g.num_vertices, spec.feature_dim)).astype(np.float32)
         labels = rng.integers(0, spec.num_classes, g.num_vertices).astype(np.int32)
@@ -264,14 +269,17 @@ def minibatch_row(
             g, rec.assignment, k, spec, feats, labels, train_mask,
             global_batch=global_batch, seed=seed,
             cache_policy=cache_policy, cache_budget=cache_budget,
+            overlap=overlap, prefetch_depth=prefetch_depth,
         )
         store = tr.store
         ms = [tr.train_step() for _ in range(steps)]
+        tr.close()
         inputs = np.stack([m.input_vertices for m in ms]).mean(axis=0)
         remote = np.stack([m.remote_vertices for m in ms]).mean(axis=0)
         edges = np.stack([m.edges for m in ms]).mean(axis=0)
         hits = np.stack([m.cache_hits for m in ms]).mean(axis=0)
         misses = np.stack([m.remote_misses for m in ms]).mean(axis=0)
+        host_times = host_phase_means(ms)
     else:
         # sampling only (fast path): identical metrics, no device compute
         from repro.gnn.sampling import SamplePlan, sample_blocks
@@ -323,7 +331,25 @@ def minibatch_row(
         inputs=inputs, remote=remote, hits=hits, misses=misses,
         est=est, steps_per_epoch=steps_per_epoch,
         cache_policy=cache_policy, cache_budget=cache_budget,
+        # the overlap column means "the pipelined engine actually ran" —
+        # the sampling-only fast path executes nothing, so it stays serial
+        overlap=overlap and run_device_step, prefetch_depth=prefetch_depth,
+        host_times=host_times,
     )
+
+
+def host_phase_means(metrics) -> dict:
+    """Mean MEASURED host/device phase wall times over a list of
+    `StepMetrics` — the `host_*` columns of a mini-batch row (this
+    container's clock, unlike the modeled paper-cluster `*_time` columns)."""
+    return {
+        "host_sample_time": float(np.mean([m.sample_time_host for m in metrics])),
+        "host_fetch_time": float(np.mean([m.fetch_time_host for m in metrics])),
+        "host_transfer_time": float(np.mean([m.transfer_time_host for m in metrics])),
+        "host_compute_time": float(np.mean([m.compute_time_host for m in metrics])),
+        "host_step_wall": float(np.mean([m.step_wall_host for m in metrics])),
+        "overlap_efficiency": float(np.mean([m.overlap_efficiency for m in metrics])),
+    }
 
 
 def minibatch_result_row(
@@ -343,9 +369,17 @@ def minibatch_result_row(
     steps_per_epoch: int,
     cache_policy: str = "none",
     cache_budget: int = 0,
+    overlap: bool = False,
+    prefetch_depth: int = 0,
+    host_times: Optional[dict] = None,
 ) -> dict:
-    """Serialize one DistDGL result (shared by the study grid and the CLI)."""
-    return {
+    """Serialize one DistDGL result (shared by the study grid and the CLI).
+
+    `step_time` models the serial phase structure, `step_time_overlap` the
+    pipelined one (cost_model.overlapped_step_time); `host_times` — from
+    `host_phase_means` when a device step actually ran — adds this
+    container's measured wall times next to the modeled cluster times."""
+    row = {
         "graph": graph_key, "method": method, "k": k,
         "model": spec.model, "feature": spec.feature_dim,
         "hidden": spec.hidden_dim, "layers": spec.num_layers,
@@ -364,6 +398,7 @@ def minibatch_result_row(
         "hit_rate": float(hits.sum() / remote.sum()) if remote.sum() else 1.0,
         "fetch_bytes": float(est.fetch_bytes.sum()),
         "step_time": est.step_time,
+        "step_time_overlap": cost_model.overlapped_step_time(est),
         "epoch_time": est.step_time * steps_per_epoch,
         "sample_time": float(est.sample_time.max()),
         "fetch_time": float(est.fetch_time.max()),
@@ -373,7 +408,14 @@ def minibatch_result_row(
             (est.sample_time + est.fetch_time + est.compute_time).max()
             / max((est.sample_time + est.fetch_time + est.compute_time).mean(), 1e-12)
         ),
+        "overlap": bool(overlap),
+        # serial rows carry depth 0 (same convention as fig19's overlap
+        # rows): the knob only means something when the pipeline is on
+        "prefetch_depth": int(prefetch_depth) if overlap else 0,
     }
+    if host_times is not None:
+        row.update(host_times)
+    return row
 
 
 # ---------------------------------------------------------------------------

@@ -5,3 +5,8 @@ from repro.gnn.feature_store import (  # noqa: F401
     RowStore,
 )
 from repro.gnn.models import GNNSpec, init_params  # noqa: F401
+from repro.gnn.pipeline import (  # noqa: F401
+    BatchPreparer,
+    PipelineEngine,
+    PreparedBatch,
+)

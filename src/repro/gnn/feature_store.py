@@ -149,6 +149,15 @@ class RowStore:
     be *observable*, not silently papered over. What the rows *are* is the
     caller's business: features (`FeatureStore`) or per-layer embeddings
     (gnn/inference.py's embedding stores).
+
+    Read-only contract: a built store is immutable — `split`/`stats`/
+    `gather` only read the frozen dataclass fields (owner array, sorted
+    cache ids, cache rows, the global rows) and write exclusively to
+    per-call locals, so any number of threads may call them concurrently
+    for any workers (the overlapped pipeline, gnn/pipeline.py, does exactly
+    that while the device steps). Anything that changes store contents must
+    build a NEW store; tests/test_pipeline.py stress-gathers from k threads
+    and asserts bitwise-equal results vs serial.
     """
 
     book: VertexPartitionBook
@@ -256,7 +265,10 @@ class RowStore:
 
     def gather(self, worker: int, ids: np.ndarray) -> tuple[np.ndarray, FetchStats]:
         """Assemble the row block for `ids` from shard/cache/remote and
-        return it with the phase accounting."""
+        return it with the phase accounting.
+
+        Thread-safe (the class read-only contract): reads frozen store
+        state only, writes only to the freshly-allocated `out` block."""
         if self.rows is None:
             raise ValueError("accounting-only store (built without rows)")
         ids = np.asarray(ids, dtype=np.int64)

@@ -11,6 +11,23 @@ vertices). A training step is the paper's five phases (§5.1):
   4. backward pass         (device; gradient all-reduce folded in)
   5. model update          (device)
 
+Phases 1-2 are host work, phases 3-5 one jitted device step — and like
+DistDGL's sampler processes they need not run back-to-back: stepping is
+delegated to `gnn.pipeline.PipelineEngine` (`overlap`/`prefetch_depth`
+knobs on `build`, `--overlap/--prefetch-depth` on launch/gnn_train.py).
+Serial mode (`overlap=False`, the default) runs phases 1-2 inline before
+every device step — the correctness oracle, with contiguous per-phase
+timestamps. Overlap mode prepares batches up to `prefetch_depth` ahead on
+a producer thread (per-worker sampling fanned out on a thread pool) while
+the device executes the current step; per-worker RNG streams
+(`SeedSequence.spawn` per (step, worker)) make both modes produce
+bitwise-identical batches from the same seed. `StepMetrics` carries true
+wall times for all four host/device phases (sample / fetch / transfer /
+compute) plus the step wall and the overlap efficiency (hidden host time
+/ total host time), feeding the fig19 phase tables in either mode. The
+device step donates params/opt_state buffers (in-place update) on
+accelerator backends.
+
 Feature loading (phase 2) is routed through `gnn.feature_store.FeatureStore`:
 each worker serves its own shard locally and holds a bounded static cache of
 hot remote vertices (``cache_policy`` in {none, random, degree, halo},
@@ -57,15 +74,11 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook, build_vertex_book
-from repro.gnn.feature_store import FeatureStore, FetchStats
+from repro.gnn.feature_store import FeatureStore
+from repro.gnn.pipeline import BatchPreparer, PipelineEngine
 from repro.kernels import ops
 from repro.gnn.models import GNNSpec, init_params
-from repro.gnn.sampling import (
-    PAPER_FANOUTS,
-    SamplePlan,
-    SampledBatch,
-    sample_blocks,
-)
+from repro.gnn.sampling import PAPER_FANOUTS, SamplePlan
 
 AXIS = "workers"
 
@@ -193,11 +206,36 @@ class StepMetrics:
     remote_vertices: np.ndarray  # [k]
     edges: np.ndarray            # [k]
     sample_time_host: float      # seconds, wall (whole step, all workers)
-    compute_time_host: float
+    compute_time_host: float     # device step (serial: absorbs step overhead
+    #                              so the four phases sum to step_wall_host)
     # feature-store phase accounting: remote = cache_hits + remote_misses
     cache_hits: np.ndarray = None      # [k]
     remote_misses: np.ndarray = None   # [k]
     miss_bytes: np.ndarray = None      # [k] feature bytes crossing the net
+    # pipeline phase accounting (gnn/pipeline.py): host wall per phase, the
+    # consumer-side step wall, and how much host time the prefetch hid
+    fetch_time_host: float = 0.0       # feature gather + stack
+    transfer_time_host: float = 0.0    # host -> device
+    step_wall_host: float = 0.0        # next_batch + device step, consumer
+    queue_wait_host: float = 0.0       # exposed (un-hidden) host time
+    overlap: bool = False
+
+    @property
+    def host_time(self) -> float:
+        """Host prep wall for this batch (sample + fetch + transfer)."""
+        return self.sample_time_host + self.fetch_time_host + self.transfer_time_host
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Hidden host time / total host time for this step.
+
+        0.0 in serial mode (every host second is exposed before the device
+        step); -> 1.0 in overlap steady state when the queue always has a
+        batch ready; 1.0 when there was no host work at all."""
+        host = self.host_time
+        if host <= 0.0:
+            return 1.0
+        return max(host - self.queue_wait_host, 0.0) / host
 
     @property
     def hit_rate(self) -> float:
@@ -227,10 +265,12 @@ class MiniBatchTrainer:
     global_batch: int
     params: Any = None
     opt_state: Any = None
-    rng: Optional[np.random.Generator] = None
+    seed: int = 0
     lr: float = 1e-3
     rebalance: bool = False
     store: Optional[FeatureStore] = None
+    overlap: bool = False
+    prefetch_depth: int = 2
     _load_ema: Optional[np.ndarray] = None
     _seed_share: Optional[np.ndarray] = None
 
@@ -252,6 +292,8 @@ class MiniBatchTrainer:
         rebalance: bool = False,
         cache_policy: str = "none",
         cache_budget: int = 0,
+        overlap: bool = False,
+        prefetch_depth: int = 2,
     ) -> "MiniBatchTrainer":
         from repro.optim import adam_init
 
@@ -272,61 +314,34 @@ class MiniBatchTrainer:
             features=features, labels=labels.astype(np.int32),
             train_vertices_per_worker=per_worker, fanouts=fanouts, plan=plan,
             global_batch=global_batch, params=params,
-            opt_state=adam_init(params), rng=np.random.default_rng(seed),
+            opt_state=adam_init(params), seed=seed,
             lr=lr, rebalance=rebalance, store=store,
+            overlap=overlap, prefetch_depth=prefetch_depth,
             _load_ema=np.ones(k), _seed_share=np.full(k, 1.0 / k),
         )
 
-    # ------------------------------------------------------------- sampling
-    def _draw_seeds(self) -> list:
-        k = self.book.k
-        shares = self._seed_share if self.rebalance else np.full(k, 1.0 / k)
-        counts = np.maximum((shares * self.global_batch).astype(int), 1)
-        counts = np.minimum(counts, self.plan.seeds)
-        out = []
-        for w in range(k):
-            pool = self.train_vertices_per_worker[w]
-            if pool.shape[0] == 0:
-                out.append(np.zeros(0, np.int64))
-                continue
-            n = min(int(counts[w]), pool.shape[0])
-            out.append(self.rng.choice(pool, size=n, replace=False).astype(np.int64))
-        return out
+    # ------------------------------------------------------------- pipeline
+    @functools.cached_property
+    def engine(self) -> PipelineEngine:
+        """The step execution engine (gnn/pipeline.py). Serial mode costs no
+        threads; overlap mode starts the producer on first use."""
+        preparer = BatchPreparer(
+            graph=self.graph, book=self.book, store=self.store,
+            plan=self.plan, fanouts=self.fanouts, labels=self.labels,
+            train_pools=self.train_vertices_per_worker,
+            global_batch=self.global_batch, tiled_layout=self._tiled_layout,
+            seed=self.seed,
+        )
+        engine = PipelineEngine(
+            preparer, overlap=self.overlap, prefetch_depth=self.prefetch_depth)
+        if self.rebalance:
+            engine.set_seed_share(self._seed_share)
+        return engine
 
-    def _stack_batches(self, batches: list):
-        """Host: the 'feature loading' phase — every worker pulls its input
-        vertices through the feature store ({shard, cache, remote} split) —
-        then stack. Returns (stacked, per-worker FetchStats)."""
-        xs = []
-        fetch: list[FetchStats] = []
-        for w, b in enumerate(batches):
-            x = np.zeros((b.input_ids.shape[0], self.features.shape[1]),
-                         dtype=self.features.dtype)
-            valid = b.input_mask
-            x[valid], st = self.store.gather(w, b.input_ids[valid])
-            fetch.append(st)
-            xs.append(x)
-        stacked = {
-            "x": jnp.asarray(np.stack(xs)),
-            "seed_labels": jnp.asarray(np.stack([b.seed_labels for b in batches])),
-            "seed_mask": jnp.asarray(np.stack([b.seed_mask for b in batches])),
-            "layers": [
-                {
-                    "esrc": jnp.asarray(np.stack([b.layers[li].esrc for b in batches])),
-                    "edst": jnp.asarray(np.stack([b.layers[li].edst for b in batches])),
-                    "emask": jnp.asarray(np.stack([b.layers[li].emask for b in batches])),
-                    "deg": jnp.asarray(np.stack([b.layers[li].sampled_deg for b in batches])),
-                }
-                for li in range(len(self.fanouts))
-            ],
-        }
-        if self._tiled_layout:  # only stacked/transferred when a backend reads it
-            for li, lay in enumerate(stacked["layers"]):
-                lay["agg_order"] = jnp.asarray(
-                    np.stack([b.layers[li].agg_order for b in batches]))
-                lay["agg_ldst"] = jnp.asarray(
-                    np.stack([b.layers[li].agg_ldst for b in batches]))
-        return stacked, fetch
+    def close(self) -> None:
+        """Release the engine's producer/sampler threads (overlap mode)."""
+        if "engine" in self.__dict__:
+            self.engine.close()
 
     @property
     def _tiled_layout(self) -> bool:
@@ -357,41 +372,48 @@ class MiniBatchTrainer:
             new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
             return loss, new_p, new_s
 
-        return jax.jit(step)
+        # donate params/opt_state so the device step updates them in place —
+        # the trainer never reads the old buffers again. CPU's jit cannot
+        # donate (XLA:CPU aliasing is unsupported and warns per compile), so
+        # the knob only engages on accelerator backends.
+        donate = () if jax.default_backend() == "cpu" else (0, 1)
+        return jax.jit(step, donate_argnums=donate)
 
     def train_step(self) -> StepMetrics:
         t0 = time.perf_counter()
-        seeds = self._draw_seeds()
-        batches = [
-            sample_blocks(
-                self.graph, s, self.fanouts, self.plan, self.rng,
-                self.labels, owner=self.book.owner, worker=w,
-                tiled_layout=self._tiled_layout,
-            )
-            for w, s in enumerate(seeds)
-        ]
+        pb, wait = self.engine.next_batch()
         t1 = time.perf_counter()
-        stacked, fetch = self._stack_batches(batches)
         loss, self.params, self.opt_state = self._train_step(
-            self.params, self.opt_state, stacked
+            self.params, self.opt_state, pb.stacked
         )
-        loss = float(loss)
+        loss = float(loss)  # blocks on the device step
         t2 = time.perf_counter()
+        wall = t2 - t0
+        # serial mode: phases are contiguous, so charge the (tiny) engine
+        # overhead to compute and the four phases sum exactly to the wall
+        compute = (t2 - t1) if self.overlap else (wall - pb.host_time)
 
-        inputs = np.array([b.num_input for b in batches])
         if self.rebalance:
-            self._load_ema = 0.7 * self._load_ema + 0.3 * np.maximum(inputs, 1)
+            self._load_ema = (0.7 * self._load_ema
+                              + 0.3 * np.maximum(pb.input_vertices, 1))
             inv = 1.0 / self._load_ema
             self._seed_share = inv / inv.sum()
+            self.engine.set_seed_share(self._seed_share)
 
+        fetch = pb.fetch_stats
         return StepMetrics(
             loss=loss,
-            input_vertices=inputs,
-            remote_vertices=np.array([b.num_remote for b in batches]),
-            edges=np.array([b.num_edges for b in batches]),
-            sample_time_host=t1 - t0,
-            compute_time_host=t2 - t1,
+            input_vertices=pb.input_vertices,
+            remote_vertices=pb.remote_vertices,
+            edges=pb.edges,
+            sample_time_host=pb.sample_time,
+            compute_time_host=compute,
             cache_hits=np.array([s.num_cache_hit for s in fetch]),
             remote_misses=np.array([s.num_remote_miss for s in fetch]),
             miss_bytes=np.array([s.miss_bytes for s in fetch]),
+            fetch_time_host=pb.fetch_time,
+            transfer_time_host=pb.transfer_time,
+            step_wall_host=wall,
+            queue_wait_host=wait,
+            overlap=self.overlap,
         )

@@ -120,15 +120,17 @@ def _sample_hop(
     if total == 0:
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
     cum = np.cumsum(deg) - deg
+    # seg_off = offset within each destination's adjacency segment; after the
+    # per-segment sort below it is ALSO the position within each dst group
+    # (both are 0..deg-1 ramps over the same segments), so one repeat serves
+    # both uses — tests pin the output against the two-repeat formulation
     seg_off = np.arange(total, dtype=np.int64) - np.repeat(cum, deg)
     all_pos = np.repeat(indptr[frontier], deg) + seg_off
     all_src = indices[all_pos].astype(np.int64)
     all_dst = np.repeat(np.arange(frontier.shape[0], dtype=np.int64), deg)
     keys = rng.random(total)
     order = np.lexsort((keys, all_dst))
-    # position within each dst group after the sort
-    pos_in_group = np.arange(total, dtype=np.int64) - np.repeat(cum, deg)
-    keep = order[pos_in_group < fanout]
+    keep = order[seg_off < fanout]
     return all_src[keep], all_dst[keep]
 
 

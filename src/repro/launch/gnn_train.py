@@ -50,6 +50,14 @@ def main() -> None:
                          "or the Pallas kernel (interpreted off-TPU)")
     ap.add_argument("--rebalance", action="store_true",
                     help="dynamic seed rebalancing (straggler mitigation)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined mini-batch execution (gnn/pipeline.py): "
+                         "sampling + feature prefetch for step t+1 run on a "
+                         "producer thread while the device computes step t; "
+                         "same batches as serial given the same seed")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="batches prepared ahead of the device step "
+                         "(bounded queue; only read with --overlap)")
     ap.add_argument("--cache-policy", default="none",
                     choices=list(CACHE_POLICIES),
                     help="per-worker remote-feature cache policy (minibatch)")
@@ -119,6 +127,7 @@ def main() -> None:
             g, assignment, args.k, spec, feats, labels, train_mask,
             global_batch=args.batch, seed=args.seed, rebalance=args.rebalance,
             cache_policy=args.cache_policy, cache_budget=args.cache_budget,
+            overlap=args.overlap, prefetch_depth=args.prefetch_depth,
         )
         if args.cache_budget:
             print(f"[gnn] feature cache: policy={args.cache_policy} "
@@ -141,11 +150,17 @@ def main() -> None:
                 tr.book.sizes, spec,
                 remote_miss_vertices=sm.remote_misses,
                 cached_vertices=tr.store.cache_sizes)
+            overlap_note = ""
+            if args.overlap:
+                eff = np.mean([s.overlap_efficiency for s in sms])
+                overlap_note = f"overlap_eff {eff:.2f} "
             print(f"[gnn] epoch {epoch:3d} loss {np.mean(losses):.4f} "
                   f"remote/step {np.mean(remotes):.0f} "
                   f"hit_rate {np.mean(hit_rates):.2f} "
+                  f"{overlap_note}"
                   f"cluster step est {est.step_time*1e3:.1f} ms "
                   f"({time.perf_counter()-t1:.2f}s)")
+        tr.close()
         if args.out_json and not sms:
             print("[gnn] --out-json needs at least one trained epoch; "
                   "no row written")
@@ -168,7 +183,9 @@ def main() -> None:
                 inputs=inputs, remote=remote, hits=hits, misses=misses,
                 est=est, steps_per_epoch=steps_per_epoch,
                 cache_policy=args.cache_policy,
-                cache_budget=args.cache_budget)
+                cache_budget=args.cache_budget,
+                overlap=args.overlap, prefetch_depth=args.prefetch_depth,
+                host_times=study.host_phase_means(sms))
             row["loss"] = float(np.mean(losses))
             study.write_rows([row], args.out_json)
             print(f"[gnn] wrote study row -> {args.out_json}")

@@ -350,14 +350,9 @@ def test_minibatch_gat_forward_scatter_free_when_not_scatter(
     tr = MiniBatchTrainer.build(
         or_graph, owner, 4, spec, feats, labels, train,
         global_batch=64, seed=3)
-    from repro.gnn.sampling import sample_blocks
-    batches = [
-        sample_blocks(tr.graph, s, tr.fanouts, tr.plan, tr.rng, tr.labels,
-                      owner=tr.book.owner, worker=w, tiled_layout=True)
-        for w, s in enumerate(tr._draw_seeds())
-    ]
-    stacked, _ = tr._stack_batches(batches)
-    batch0 = jax.tree.map(lambda a: a[0], stacked)
+    # pallas != scatter => the engine's preparer attaches the tiled layout
+    pb = tr.engine.preparer.prepare()
+    batch0 = jax.tree.map(lambda a: a[0], pb.stacked)
     sizes = tuple(tr._layer_sizes)
     jaxpr = jax.make_jaxpr(
         lambda params: minibatch_loss(spec, params, batch0, sizes, axis=None)

@@ -1,0 +1,225 @@
+"""Pipelined mini-batch execution (gnn/pipeline.py).
+
+  * overlapped and serial modes produce bitwise-identical batches from the
+    same seed (per-(step, worker) RNG streams, not thread schedule) — and
+    therefore identical 5-step loss trajectories for sage + gat on the
+    scatter + tiled backends
+  * FeatureStore.gather is safe under concurrent calls (read-only
+    contract): k threads hammering the same store reproduce the serial
+    results bitwise
+  * serial phase accounting is contiguous: sample + fetch + transfer +
+    compute == the measured step wall, and overlap efficiency is 0
+  * the cost model's overlapped step time is max(host, compute)-shaped:
+    never above the serial estimate, never below compute + allreduce
+"""
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.vertex_partition import partition_vertices
+from repro.gnn.minibatch import MiniBatchTrainer
+from repro.gnn.models import GNNSpec
+
+
+def _trainer(graph, node_data, *, overlap, model="sage", backend="scatter",
+             seed=3, **kw):
+    feats, labels, train = node_data
+    a = partition_vertices(graph, 4, "metis", seed=0)
+    spec = GNNSpec(model=model, feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2, agg_backend=backend)
+    return MiniBatchTrainer.build(
+        graph, a, 4, spec, feats, labels, train,
+        global_batch=32, seed=seed, overlap=overlap, **kw)
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_overlap_batches_bitwise_identical_to_serial(or_graph, node_data):
+    """The acceptance gate: same seed => same batches, regardless of mode,
+    prefetch depth, or producer thread schedule."""
+    serial = _trainer(or_graph, node_data, overlap=False)
+    overlap = _trainer(or_graph, node_data, overlap=True, prefetch_depth=3)
+    try:
+        for _ in range(4):
+            pb_s, _ = serial.engine.next_batch()
+            pb_o, _ = overlap.engine.next_batch()
+            assert pb_s.index == pb_o.index
+            _tree_equal(pb_s.stacked, pb_o.stacked)
+            assert pb_s.fetch_stats == pb_o.fetch_stats
+            np.testing.assert_array_equal(pb_s.input_vertices,
+                                          pb_o.input_vertices)
+            np.testing.assert_array_equal(pb_s.edges, pb_o.edges)
+    finally:
+        serial.close()
+        overlap.close()
+
+
+@pytest.mark.parametrize("model", ["sage", "gat"])
+@pytest.mark.parametrize("backend", ["scatter", "tiled"])
+def test_overlap_loss_trajectory_matches_serial(or_graph, node_data, model,
+                                                backend):
+    """Identical batches + one deterministic compiled step => identical
+    loss trajectories, 5 steps, both models, both aggregation backends."""
+    losses = {}
+    for overlap in (False, True):
+        tr = _trainer(or_graph, node_data, overlap=overlap, model=model,
+                      backend=backend)
+        losses[overlap] = [tr.train_step().loss for _ in range(5)]
+        tr.close()
+    assert losses[True] == losses[False]
+
+
+def test_concurrent_gather_matches_serial(or_graph, node_data):
+    """RowStore read-only contract: k threads x many gathers == serial."""
+    tr = _trainer(or_graph, node_data, overlap=False, cache_policy="degree",
+                  cache_budget=64)
+    store = tr.store
+    rng = np.random.default_rng(0)
+    jobs = [(w, rng.integers(0, or_graph.num_vertices, 257))
+            for w in range(4) for _ in range(8)]
+    serial = [store.gather(w, ids) for w, ids in jobs]
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        threaded = list(pool.map(lambda j: store.gather(*j), jobs))
+    for (x_s, st_s), (x_t, st_t) in zip(serial, threaded):
+        np.testing.assert_array_equal(x_s, x_t)
+        assert st_s == st_t
+
+
+def test_serial_phase_accounting_covers_wall(or_graph, node_data):
+    tr = _trainer(or_graph, node_data, overlap=False)
+    tr.train_step()  # compile
+    for _ in range(2):
+        m = tr.train_step()
+        phases = (m.sample_time_host + m.fetch_time_host
+                  + m.transfer_time_host + m.compute_time_host)
+        assert phases >= m.step_wall_host * (1 - 1e-9)
+        assert m.overlap_efficiency == 0.0
+        assert not m.overlap
+    tr.close()
+
+
+def test_overlap_hides_host_time_in_steady_state(or_graph, node_data):
+    tr = _trainer(or_graph, node_data, overlap=True, prefetch_depth=2)
+    tr.train_step()  # compile (producer races ahead meanwhile)
+    ms = [tr.train_step() for _ in range(6)]
+    tr.close()
+    for m in ms:
+        assert m.overlap
+        assert 0.0 <= m.overlap_efficiency <= 1.0
+        assert m.host_time > 0.0
+    # the queue must have hidden a real fraction of host time overall
+    hidden = sum(max(m.host_time - m.queue_wait_host, 0.0) for m in ms)
+    assert hidden > 0.0
+
+
+def test_rebalance_composes_with_overlap(or_graph, node_data):
+    """Delayed-feedback seed shares: steps keep running and the share
+    vector the trainer publishes reaches the producer."""
+    tr = _trainer(or_graph, node_data, overlap=True, rebalance=True)
+    ms = [tr.train_step() for _ in range(4)]
+    share = tr._seed_share.copy()
+    engine_share = tr.engine._current_share()
+    tr.close()
+    assert all(np.isfinite(m.loss) for m in ms)
+    np.testing.assert_allclose(engine_share, share)
+
+
+def test_engine_rejects_bad_depth(or_graph, node_data):
+    with pytest.raises(ValueError):
+        _trainer(or_graph, node_data, overlap=True, prefetch_depth=0).engine
+
+
+def test_engine_close_is_idempotent(or_graph, node_data):
+    tr = _trainer(or_graph, node_data, overlap=True)
+    tr.train_step()
+    tr.close()
+    tr.close()
+    assert not tr.engine._producer.is_alive()
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_next_batch_after_close_raises(or_graph, node_data, overlap):
+    """A closed engine must raise in BOTH modes, never block or keep
+    silently producing (and advancing the RNG tree)."""
+    tr = _trainer(or_graph, node_data, overlap=overlap)
+    tr.engine.next_batch()
+    tr.close()
+    with pytest.raises(RuntimeError):
+        tr.engine.next_batch()
+
+
+def test_producer_error_surfaces_in_consumer(or_graph, node_data):
+    """A producer crash is delivered as a RuntimeError (poison token or
+    liveness check), even when the queue was full at crash time."""
+    tr = _trainer(or_graph, node_data, overlap=True, prefetch_depth=1)
+    engine = tr.engine
+    engine.next_batch()  # ensure the producer is up and producing
+    boom = ValueError("sampler exploded")
+
+    def bad_prepare(*a, **kw):
+        raise boom
+
+    engine.preparer.prepare = bad_prepare
+    with pytest.raises(RuntimeError) as ei:
+        for _ in range(8):  # drain whatever was prefetched before the crash
+            engine.next_batch()
+    assert ei.value.__cause__ is boom
+    tr.close()
+
+
+def test_cost_model_overlapped_step_time():
+    spec = GNNSpec(model="sage", feature_dim=64, hidden_dim=32, num_classes=8)
+    inputs = np.array([1000.0, 900.0])
+    remote = np.array([400.0, 350.0])
+    edges = np.array([5000.0, 4500.0])
+    owned = np.array([2000.0, 2000.0])
+    est = cost_model.minibatch_step(inputs, remote, edges, owned, spec)
+    t_over = cost_model.overlapped_step_time(est)
+    assert est.allreduce_time > 0.0
+    assert t_over <= est.step_time
+    # overlap hides host time behind compute but can't beat either bound
+    host = est.sample_time + est.fetch_time
+    assert t_over >= float(est.compute_time.max()) + est.allreduce_time
+    assert t_over >= float(host.max()) + est.allreduce_time
+    np.testing.assert_allclose(
+        t_over, float(np.maximum(host, est.compute_time).max())
+        + est.allreduce_time)
+
+
+def test_study_row_overlap_columns():
+    from repro.core.study import StudyCache, minibatch_row
+
+    cache = StudyCache()
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    rows = {ov: minibatch_row("OR", "metis", 4, spec, scale=0.01, cache=cache,
+                              global_batch=32, steps=2, run_device_step=True,
+                              overlap=ov)
+            for ov in (False, True)}
+    for ov, r in rows.items():
+        assert r["overlap"] == ov
+        assert r["step_time_overlap"] <= r["step_time"]
+        for col in ("host_sample_time", "host_fetch_time",
+                    "host_transfer_time", "host_compute_time",
+                    "host_step_wall", "overlap_efficiency"):
+            assert col in r
+    # identical batches both modes => identical sampled metrics in the row
+    for col in ("input_vertices", "remote_vertices", "fetch_bytes"):
+        assert rows[True][col] == pytest.approx(rows[False][col])
+    # the sampling-only path carries the model columns but no host ones,
+    # and never claims pipelined execution (nothing executed)
+    r = minibatch_row("OR", "metis", 4, spec, scale=0.01, cache=cache,
+                      global_batch=32, steps=2, overlap=True)
+    assert r["overlap"] is False and r["prefetch_depth"] == 0
+    assert "host_sample_time" not in r
+    assert r["step_time_overlap"] <= r["step_time"]

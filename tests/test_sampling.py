@@ -86,6 +86,49 @@ def test_better_partition_fewer_remote(or_graph):
     assert totals["metis"] < totals["random"]
 
 
+def _sample_hop_two_repeat_reference(indptr, indices, frontier, fanout, rng):
+    """The pre-dedupe `_sample_hop`: seg_off and pos_in_group computed as
+    two separate `np.repeat(cum, deg)` materialisations. Kept verbatim as
+    the oracle for the dedupe refactor."""
+    deg = (indptr[frontier + 1] - indptr[frontier]).astype(np.int64)
+    total = int(deg.sum())
+    if total == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    cum = np.cumsum(deg) - deg
+    seg_off = np.arange(total, dtype=np.int64) - np.repeat(cum, deg)
+    all_pos = np.repeat(indptr[frontier], deg) + seg_off
+    all_src = indices[all_pos].astype(np.int64)
+    all_dst = np.repeat(np.arange(frontier.shape[0], dtype=np.int64), deg)
+    keys = rng.random(total)
+    order = np.lexsort((keys, all_dst))
+    pos_in_group = np.arange(total, dtype=np.int64) - np.repeat(cum, deg)
+    keep = order[pos_in_group < fanout]
+    return all_src[keep], all_dst[keep]
+
+
+@pytest.mark.parametrize("fanout", [1, 4, 25])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_sample_hop_dedup_unchanged(or_graph, fanout, seed):
+    """Micro-assert for the seg_off/pos_in_group dedupe: bit-identical
+    edges to the two-repeat formulation, same RNG stream consumption."""
+    from repro.gnn.sampling import _sample_hop
+
+    indptr, indices = or_graph.csr()
+    rng = np.random.default_rng(seed)
+    frontier = rng.choice(or_graph.num_vertices, size=48, replace=False)
+    src_new, dst_new = _sample_hop(
+        indptr, indices, frontier, fanout, np.random.default_rng(seed + 1))
+    src_ref, dst_ref = _sample_hop_two_repeat_reference(
+        indptr, indices, frontier, fanout, np.random.default_rng(seed + 1))
+    np.testing.assert_array_equal(src_new, src_ref)
+    np.testing.assert_array_equal(dst_new, dst_ref)
+    # the empty-frontier fast path too
+    empty = np.zeros(0, np.int64)
+    for arr in _sample_hop(indptr, indices, empty, fanout,
+                           np.random.default_rng(0)):
+        assert arr.shape == (0,)
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     n=st.integers(min_value=30, max_value=200),
