@@ -5,7 +5,9 @@ segment-reduce (sum AND max) microbench rows, and scatter-vs-tiled step time
 + aggregate traffic bytes for the full-batch (sage/gcn/gat, k in {1, 4}) and
 mini-batch (sage) trainers — gat exercises the segment-max path end to end —
 and the serial-vs-pipelined mini-batch step rows (the overlapped execution
-engine, gnn/pipeline.py, sharing fig19's measured bench).
+engine, gnn/pipeline.py, sharing fig19's measured bench), and the
+ring-vs-halo-vs-dense sync-strategy step rows (gnn/sync.py; the full k
+sweep + HLO byte pin is fig_ring_scaleout).
 `--smoke` (or `run.py --smoke`) runs the aggregation bench at the trimmed CI
 scale; the dry-run section still needs the cache.
 """
@@ -142,6 +144,39 @@ def agg_backend_bench() -> None:
          f"scatter_over_tiled={times['scatter'] / times['tiled']:.3f}")
 
 
+def sync_mode_bench() -> None:
+    """Measured ring-vs-halo-vs-dense step time at one k (the SyncStrategy
+    seam end to end, same trainer): the per-aggregate collective volume of
+    each mode rides along so the step-time ordering can be read against the
+    bytes ordering. The full k sweep lives in fig_ring_scaleout."""
+    from repro.core.edge_partition import partition_edges
+    from repro.core.graph import paper_graph
+    from repro.gnn.fullbatch import FullBatchTrainer
+    from repro.gnn.models import GNNSpec
+    from repro.gnn.sync import sync_bytes_per_round
+
+    g = paper_graph("OR", scale=AGG_SCALE, seed=0)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_vertices, 32)).astype(np.float32)
+    labels = rng.integers(0, 8, g.num_vertices).astype(np.int32)
+    train = rng.random(g.num_vertices) < 0.3
+    spec = GNNSpec(model="sage", feature_dim=32, hidden_dim=32,
+                   num_classes=8, num_layers=2)
+    k = 4
+    asg = partition_edges(g, k, "hep100", seed=0)
+    times = {}
+    for mode in ("ring", "halo", "dense"):
+        tr = FullBatchTrainer.build(
+            g, None if mode == "ring" else asg, k, spec,
+            feats, labels, train, sync_mode=mode, seed=0)
+        times[mode] = _time_steps(tr.train_step)
+        emit(f"roofline.sync.fullbatch.sage.k{k}.{mode}", times[mode],
+             f"round_bytes={sync_bytes_per_round(tr.book, spec.hidden_dim, mode)}")
+    emit(f"roofline.sync.fullbatch.sage.k{k}.speedup", 0.0,
+         f"halo_over_ring={times['halo'] / times['ring']:.3f};"
+         f"dense_over_ring={times['dense'] / times['ring']:.3f}")
+
+
 def overlap_bench() -> None:
     """Measured serial-vs-pipelined mini-batch step rows (the overlapped
     execution engine, gnn/pipeline.py) — shares fig19's bench so the two
@@ -217,6 +252,7 @@ def main() -> None:
     if smoke:
         segment_reduce_bench()
         agg_backend_bench()
+        sync_mode_bench()
         overlap_bench()
         serving_bench()
     if not os.path.exists(RESULTS):

@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.tab3_amortization",
     "benchmarks.fig_cache_sweep",
     "benchmarks.fig_serving",
+    "benchmarks.fig_ring_scaleout",
     "benchmarks.roofline",
 ]
 

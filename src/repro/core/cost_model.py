@@ -20,7 +20,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.partition_book import EdgePartitionBook
+from repro.core.partition_book import BlockRowBook, EdgePartitionBook
 from repro.gnn.models import GNNSpec
 
 __all__ = [
@@ -29,6 +29,7 @@ __all__ = [
     "fullbatch_epoch",
     "minibatch_step",
     "overlapped_step_time",
+    "ring_bytes_per_round",
     "serve_request",
 ]
 
@@ -101,20 +102,95 @@ class FullBatchEstimate:
     oom: bool
 
 
+def ring_bytes_per_round(book: BlockRowBook, d: int) -> int:
+    """Cluster-wide `ppermute` bytes of ONE ring aggregate at width d.
+
+    k−1 stages, each device shipping its [Vb+1, d] f32 payload block:
+    k·(k−1)·(Vb+1)·d·4 bytes. Independent of graph structure — the 1.5D
+    regime trades the replication-factor sensitivity of halo for a fixed
+    (k−1)/k · V·d volume (< dense's 2·V·d at every k). Matches
+    `gnn.sync.sync_bytes_per_round(book, d, "ring")` and is pinned against
+    the compiled collective-permute HLO in tests/test_dist_lowering.py.
+    """
+    return book.k * (book.k - 1) * (book.v_block + 1) * d * 4
+
+
+def _ring_epoch(
+    book: BlockRowBook,
+    spec: GNNSpec,
+    cluster: ClusterSpec,
+) -> FullBatchEstimate:
+    """Overlap-aware 1.5D ring epoch estimate.
+
+    Each aggregate is k stages of per-chunk segment-SpMM with the next
+    block's `ppermute` in flight: a stage's transfer is hidden when the
+    chunk compute covers it, so per aggregate
+        time = k·c_stage + (k−1)·max(0, t_stage − c_stage)
+    and only the uncovered remainder shows up as comm_time.
+    """
+    k = book.k
+    edges = book.chunk_emask.sum(axis=(1, 2)).astype(np.float64)
+    verts = book.vmask.sum(axis=1).astype(np.float64)
+
+    # chunk_emask already counts BOTH directions of every stored edge, while
+    # _agg_bytes_per_edge prices a stored (bidirectional) edge — halve.
+    agg_bytes = edges / 2.0 * _agg_bytes_per_edge(spec) * 3.0
+    nn_flops = verts * _model_flops_per_vertex(spec) * 3.0
+    compute = agg_bytes / cluster.mem_bw + nn_flops / cluster.flops
+
+    dims = [dout for _, dout in spec.dims()]
+    syncs = (3 if spec.model == "gat" else 1) * 2  # per layer, fwd+bwd
+    stage_rows = float(book.v_block + 1)
+    comm_bytes = np.full(k, (k - 1) * stage_rows * 4 * sum(dims) * syncs)
+    comm = np.zeros(k)
+    if k > 1:
+        for d in dims:
+            t_stage = (stage_rows * d * 4 / cluster.net_bw
+                       + cluster.net_latency)
+            # per-stage chunk compute: this layer's aggregation share of the
+            # memory-bound traffic, spread over the k chunks
+            layer_frac = 3 * 4 * d / _agg_bytes_per_edge(spec)
+            c_stage = agg_bytes * layer_frac / cluster.mem_bw / k
+            exposed = np.maximum(0.0, t_stage - c_stage) * (k - 1)
+            comm += exposed * syncs
+    f, h, L = spec.feature_dim, spec.hidden_dim, spec.num_layers
+    memory = (
+        verts * f * 4
+        + verts * h * 4 * L * 2
+        + edges * 4
+        + 2 * stage_rows * max(f, h) * 4  # double-buffered rotation payload
+    )
+    epoch = float((compute + comm).max())
+    return FullBatchEstimate(
+        epoch_time=epoch,
+        compute_time=compute,
+        comm_time=comm,
+        comm_bytes=comm_bytes,
+        memory=memory,
+        oom=bool((memory > cluster.memory).any()),
+    )
+
+
 def fullbatch_epoch(
-    book: EdgePartitionBook,
+    book,
     spec: GNNSpec,
     cluster: ClusterSpec = PAPER_CLUSTER,
 ) -> FullBatchEstimate:
-    """DistGNN epoch estimate from a real partition book.
+    """Full-batch epoch estimate from a real partition book.
 
+    EdgePartitionBook (DistGNN/halo regime) —
     Compute: aggregation is memory-bound over local edges; vertex updates are
     dense flops over local (replicated!) vertices — so *vertex imbalance*
     directly skews compute, exactly the paper's §4.2(2) observation.
     Communication: true per-partition replica-sync volume (alltoallv on the
     paper's cluster — no bucket padding), reduce + broadcast per layer,
     forward + backward.
+
+    BlockRowBook (1.5D ring regime) — see `_ring_epoch`: fixed rotation
+    volume with the transfer overlapped against per-chunk compute.
     """
+    if isinstance(book, BlockRowBook):
+        return _ring_epoch(book, spec, cluster)
     k = book.k
     edges = book.emask.sum(axis=1).astype(np.float64)
     verts = book.vmask.sum(axis=1).astype(np.float64)

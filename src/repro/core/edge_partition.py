@@ -337,6 +337,18 @@ def hep100(graph: Graph, k: int, seed: int = 0) -> np.ndarray:
     return _hep(graph, k, seed, tau=100.0)
 
 
+def blockrow(graph: Graph, k: int, seed: int = 0) -> np.ndarray:
+    """1.5D block-row assignment (CAGNET-style): vertex v's contiguous block
+    owns every edge whose DESTINATION is v. Needs no heuristic pass at all —
+    the near-zero partitioning-time end of the amortization trade-off — and
+    is the layout `BlockRowBook` / `RingSync` pipeline around. Usable as a
+    plain edge partitioner too (halo/dense run on it), which is what makes
+    partition layout and sync strategy independent axes."""
+    del seed  # deterministic: blocks are contiguous vertex ranges
+    v_block = -(-graph.num_vertices // k)  # ceil(V / k)
+    return (graph.dst.astype(np.int64) // v_block).astype(np.int32)
+
+
 EDGE_PARTITIONERS: dict[str, Callable[..., np.ndarray]] = {
     "random": random_edge,
     "dbh": dbh,
@@ -344,6 +356,7 @@ EDGE_PARTITIONERS: dict[str, Callable[..., np.ndarray]] = {
     "2ps-l": two_ps_l,
     "hep10": hep10,
     "hep100": hep100,
+    "blockrow": blockrow,
 }
 
 

@@ -1,4 +1,4 @@
-"""DistGNN-style full-batch distributed GNN training (edge partitioning).
+"""Distributed full-batch GNN training (vertex-cut halo/dense + 1.5D ring).
 
 The per-device program (models.py + sync.py) is identical across three
 execution modes:
@@ -12,6 +12,19 @@ execution modes:
                    path; also what the multi-pod dry-run lowers.
   k == 1           the single-machine oracle (LocalSync), used as the
                    correctness reference: distributed == single, allclose.
+
+The step is composed from four orthogonal STAGE functions, so partition
+layout (EdgePartitionBook vs BlockRowBook), sync strategy (halo / dense /
+ring), and execution mode (sim / shard_map) are pluggable axes:
+
+  build_book          partition layout     (edge book | 1.5D block rows)
+  build_device_blocks static device state  (Block     | RingBlock)
+  make_step_fns       per-device loss/forward closed over the SyncStrategy
+  wrap_spmd           SPMD dispatch        (bare | vmap sim | shard_map)
+
+`FullBatchTrainer` is the thin composition of the four; every combination
+runs through the same trainer, with the k=1 LocalSync oracle pinning
+correctness for all of them (tests/test_gnn_distributed.py, test_ring.py).
 
 The trainer measures, per step: loss, collective bytes (analytic, verified
 against dry-run HLO), and per-partition compute cost proxies — feeding the
@@ -29,21 +42,148 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.partition_book import EdgePartitionBook, build_edge_book
+from repro.core.partition_book import (
+    BlockRowBook,
+    build_blockrow_book,
+    build_edge_book,
+)
 from repro.gnn import models
 from repro.gnn.models import GNNSpec
-from repro.gnn.sync import Block, build_blocks, make_sync, sync_bytes_per_round
+from repro.gnn.sync import (
+    build_blocks,
+    build_ring_blocks,
+    make_sync,
+    sync_bytes_per_round,
+)
 from repro.optim import adam_init, adam_update
 
 AXIS = "parts"
 
 
+# ---------------------------------------------------------------------------
+# Stage 1: partition layout
+# ---------------------------------------------------------------------------
+
+
+def build_book(
+    graph: Graph,
+    edge_assignment: Optional[np.ndarray],
+    k: int,
+    *,
+    sync_mode: str = "halo",
+    tiled_layout: bool = False,
+):
+    """Choose the static layout for a sync strategy.
+
+    halo/dense/local run on an `EdgePartitionBook` (any edge partitioner);
+    ring runs on a `BlockRowBook` (1.5D contiguous blocks — needs no
+    partitioning heuristic, so `edge_assignment` is ignored / may be None).
+    """
+    if sync_mode == "ring":
+        return build_blockrow_book(graph, k, tiled_layout=tiled_layout)
+    if edge_assignment is None:
+        raise ValueError(f"sync mode {sync_mode!r} needs an edge assignment")
+    return build_edge_book(graph, edge_assignment, k,
+                           tiled_layout=tiled_layout)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: static device state
+# ---------------------------------------------------------------------------
+
+
+def build_device_blocks(book, features, labels, train_mask):
+    """Stacked [k, ...] device blocks matching the book's layout."""
+    if isinstance(book, BlockRowBook):
+        return build_ring_blocks(book, features, labels, train_mask)
+    return build_blocks(book, features, labels, train_mask)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: per-device programs
+# ---------------------------------------------------------------------------
+
+
+def resolve_sync_mode(sync_mode: str, k: int) -> str:
+    """k=1 collapses the partial-aggregate strategies to the LocalSync
+    oracle. Ring stays ring: its blocks carry chunk tables, not halo
+    tables, and its k=1 loop is already collective-free."""
+    if k == 1 and sync_mode != "ring":
+        return "local"
+    return sync_mode
+
+
+def make_step_fns(spec: GNNSpec, sync_mode: str, num_vertices: int, k: int):
+    """(loss_fn, forward_fn), each `(params, blk) -> ...` on ONE device."""
+    mode = resolve_sync_mode(sync_mode, k)
+
+    def loss(params, blk):
+        sync = make_sync(mode, blk, num_vertices, AXIS)
+        return models.loss_fn(spec, params, blk.x, blk, sync)
+
+    def forward(params, blk):
+        sync = make_sync(mode, blk, num_vertices, AXIS)
+        return models.forward(spec, params, blk.x, blk, sync)
+
+    return loss, forward
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: SPMD dispatch
+# ---------------------------------------------------------------------------
+
+
+def wrap_spmd(fn, k: int, mode: str,
+              mesh: Optional[jax.sharding.Mesh] = None):
+    """Run a (params, stacked_blocks) function in the chosen mode."""
+    if k == 1:
+        return lambda params, blocks: fn(
+            params, jax.tree.map(lambda a: a[0], blocks)
+        )
+    if mode == "sim":
+        return jax.vmap(fn, in_axes=(None, 0), axis_name=AXIS)
+    assert mesh is not None, "shard_map mode needs a mesh"
+    P = jax.sharding.PartitionSpec
+
+    def per_device(params, blocks_local):
+        # shard_map keeps the sharded leading dim as size 1 (vmap strips
+        # it) — squeeze in, unsqueeze out
+        blk = jax.tree.map(lambda a: a[0], blocks_local)
+        out = fn(params, blk)
+        return jax.tree.map(lambda a: a[None], out)
+
+    # jax >= 0.6 exposes jax.shard_map (check_vma); 0.4.x has the
+    # experimental module (check_rep). Same semantics either way.
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(P(), P(AXIS)),
+            out_specs=P(AXIS),
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(P(), P(AXIS)),
+        out_specs=P(AXIS),
+        check_rep=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The trainer: composition of the four stages
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
 class FullBatchTrainer:
     spec: GNNSpec
-    book: EdgePartitionBook
-    blocks: Block                      # stacked [k, ...]
-    sync_mode: str = "halo"            # halo | dense
+    book: Any                          # EdgePartitionBook | BlockRowBook
+    blocks: Any                        # Block | RingBlock, stacked [k, ...]
+    sync_mode: str = "halo"            # halo | dense | ring
     mode: str = "sim"                  # sim | shard_map
     mesh: Optional[jax.sharding.Mesh] = None
     params: Any = None
@@ -55,7 +195,7 @@ class FullBatchTrainer:
     def build(
         cls,
         graph: Graph,
-        edge_assignment: np.ndarray,
+        edge_assignment: Optional[np.ndarray],
         k: int,
         spec: GNNSpec,
         features: np.ndarray,
@@ -68,11 +208,11 @@ class FullBatchTrainer:
         seed: int = 0,
         lr: float = 1e-2,
     ) -> "FullBatchTrainer":
-        book = build_edge_book(
-            graph, edge_assignment, k,
+        book = build_book(
+            graph, edge_assignment, k, sync_mode=sync_mode,
             tiled_layout=(spec.agg_backend != "scatter"),
         )
-        blocks = build_blocks(book, features, labels, train_mask)
+        blocks = build_device_blocks(book, features, labels, train_mask)
         params = models.init_params(spec, seed=seed)
         return cls(
             spec=spec, book=book, blocks=blocks, sync_mode=sync_mode,
@@ -81,54 +221,21 @@ class FullBatchTrainer:
         )
 
     # ------------------------------------------------------------- plumbing
-    def _per_device_loss(self, params, blk: Block) -> jnp.ndarray:
-        sync_mode = "local" if self.book.k == 1 else self.sync_mode
-        sync = make_sync(sync_mode, blk, self.book.num_vertices, AXIS)
-        return models.loss_fn(self.spec, params, blk.x, blk, sync)
+    @functools.cached_property
+    def _step_fns(self):
+        return make_step_fns(self.spec, self.sync_mode,
+                             self.book.num_vertices, self.book.k)
 
     def _wrap(self, fn):
-        """Run a (params, stacked_blocks) function in the chosen mode."""
-        if self.book.k == 1:
-            return lambda params, blocks: fn(
-                params, jax.tree.map(lambda a: a[0], blocks)
-            )
-        if self.mode == "sim":
-            return jax.vmap(fn, in_axes=(None, 0), axis_name=AXIS)
-        assert self.mesh is not None, "shard_map mode needs a mesh"
-        P = jax.sharding.PartitionSpec
-
-        def per_device(params, blocks_local):
-            # shard_map keeps the sharded leading dim as size 1 (vmap strips
-            # it) — squeeze in, unsqueeze out
-            blk = jax.tree.map(lambda a: a[0], blocks_local)
-            out = fn(params, blk)
-            return jax.tree.map(lambda a: a[None], out)
-
-        # jax >= 0.6 exposes jax.shard_map (check_vma); 0.4.x has the
-        # experimental module (check_rep). Same semantics either way.
-        if hasattr(jax, "shard_map"):
-            return jax.shard_map(
-                per_device,
-                mesh=self.mesh,
-                in_specs=(P(), P(AXIS)),
-                out_specs=P(AXIS),
-                check_vma=False,
-            )
-        from jax.experimental.shard_map import shard_map
-
-        return shard_map(
-            per_device,
-            mesh=self.mesh,
-            in_specs=(P(), P(AXIS)),
-            out_specs=P(AXIS),
-            check_rep=False,
-        )
+        return wrap_spmd(fn, self.book.k, self.mode, self.mesh)
 
     # ----------------------------------------------------------------- api
     @functools.cached_property
     def _train_step(self):
+        per_device_loss, _ = self._step_fns
+
         def loss_of(params, blocks):
-            losses = self._wrap(self._per_device_loss)(params, blocks)
+            losses = self._wrap(per_device_loss)(params, blocks)
             return jnp.mean(losses)
 
         def step(params, opt_state, blocks):
@@ -142,12 +249,10 @@ class FullBatchTrainer:
 
     @functools.cached_property
     def _forward(self):
-        def fwd(params, blk: Block):
-            sync_mode = "local" if self.book.k == 1 else self.sync_mode
-            sync = make_sync(sync_mode, blk, self.book.num_vertices, AXIS)
-            return models.forward(self.spec, params, blk.x, blk, sync)
-
-        return jax.jit(lambda params, blocks: self._wrap(fwd)(params, blocks))
+        _, per_device_fwd = self._step_fns
+        return jax.jit(
+            lambda params, blocks: self._wrap(per_device_fwd)(params, blocks)
+        )
 
     def train_step(self) -> float:
         loss, self.params, self.opt_state = self._train_step(
@@ -166,8 +271,9 @@ class FullBatchTrainer:
     def comm_bytes_per_epoch(self) -> int:
         """Analytic collective traffic of one full-batch epoch (fwd+bwd).
 
-        Backward of a reduce+broadcast pair is another broadcast+reduce pair
-        -> 2x forward volume. GAT syncs 3 aggregates/layer, SAGE/GCN 1.
+        Backward of a reduce+broadcast pair is another broadcast+reduce pair;
+        backward of a ppermute ring is the reverse ring — either way 2x the
+        forward volume. GAT syncs 3 aggregates/layer, SAGE/GCN 1.
         """
         syncs_per_layer = 3 if self.spec.model == "gat" else 1
         dims = [d_out for _, d_out in self.spec.dims()]
@@ -190,10 +296,15 @@ class FullBatchTrainer:
         h = self.spec.hidden_dim
         L = self.spec.num_layers
         verts = self.book.vmask.sum(axis=1)  # true local vertices
-        edges = self.book.emask.sum(axis=1)
+        if isinstance(self.book, BlockRowBook):
+            edges = self.book.chunk_emask.sum(axis=(1, 2))
+            # double-buffered rotation payload instead of halo buckets
+            comm_buf = 2 * (self.book.v_block + 1) * max(f, h) * 4
+        else:
+            edges = self.book.emask.sum(axis=1)
+            comm_buf = 2 * k * self.book.bucket * max(f, h) * 4
         feat = verts * f * 4
         # stored activations: one [Vloc, hidden] per layer (backward needs them)
         acts = verts * h * 4 * L
         structure = edges * 2 * 4
-        halo = 2 * k * self.book.bucket * max(f, h) * 4
-        return (feat + acts + structure + halo).astype(np.int64)
+        return (feat + acts + structure + comm_buf).astype(np.int64)

@@ -8,10 +8,20 @@ Every function here operates on ONE partition's local block:
   degree [Vloc+1]      *global* symmetric degree of each local vertex
   master [Vloc+1]      bool, true where this partition owns the vertex
 
-plus a `sync` object (repro.gnn.sync.ReplicaSync) that completes partial
-aggregates across partitions. With the `LocalSync` no-op the same code is the
-exact single-machine model — that equivalence is the core system invariant
-and is tested (distributed forward == single-device forward, allclose).
+plus a `sync` strategy (repro.gnn.sync.SyncStrategy). Every edge aggregation
+goes through `sync.edge_aggregate(blk, payload, msg_fn, ...)`, which returns
+the COMPLETE global per-destination reduce regardless of how features are
+laid out or moved — partial-aggregate completion (Local/Dense/Halo over an
+`EdgePartitionBook`) or ring-pipelined block rotation (RingSync over a
+`BlockRowBook`). With the `LocalSync` no-op the same code is the exact
+single-machine model — that equivalence is the core system invariant and is
+tested (distributed forward == single-device forward, allclose, for every
+strategy).
+
+Self terms (GCN's self-loop, GAT's self-edge) are added AFTER completion,
+ungated: completed aggregates and x are replica-consistent, so the term is
+counted exactly once per vertex under every strategy — including ring,
+where no replicas exist at all.
 
 Aggregation is over the symmetrised adjacency: each stored edge (u, v)
 produces messages u->v and v->u (DGL-on-undirected semantics, which both
@@ -44,8 +54,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.kernels import ops
 
 Params = Any
 
@@ -108,42 +116,10 @@ def init_params(spec: GNNSpec, seed: int = 0) -> Params:
 # ---------------------------------------------------------------------------
 
 
-def _scatter_bidir(values_src, values_dst, blk, num_rows,
-                   backend: str = "scatter", reduce: str = "sum"):
-    """Reduce messages over the symmetrised edge list into vertex rows.
-
-    values_src: [E, d] message carried by the edge toward `edst`
-    values_dst: [E, d] message toward `esrc` (reverse direction)
-    Padding edges point at the dummy row (num_rows-1) and carry the reduce
-    identity's stand-in (zeros for sum, the -1e30 mask floor for max).
-
-    Dispatches to `ops.aggregate`: the symmetrised list is the concatenation
-    [values_src -> edst | values_dst -> esrc], whose tiled layout the
-    partition book precomputed into `blk.agg_order`/`blk.agg_ldst`.
-
-    For reduce="max", rows no valid edge reaches come back as -inf
-    (tiled/pallas drop masked edges from the layout) or as the masked score
-    floor -1e30 (scatter sees the masked messages) — callers clamp with
-    `jnp.maximum` against a finite floor (e_self, then -1e29) before use,
-    after which the backends agree exactly.
-    """
-    messages = jnp.concatenate([values_src, values_dst], axis=0)
-    dst = jnp.concatenate([blk.edst, blk.esrc], axis=0)
-    return ops.aggregate(
-        messages, dst, num_rows,
-        edge_order=blk.agg_order, local_dst=blk.agg_ldst, backend=backend,
-        reduce=reduce,
-    )
-
-
 def sage_layer(p, x, blk, sync, *, final: bool,
                backend: str = "scatter") -> jnp.ndarray:
-    n = x.shape[0]
-    msg = x[blk.esrc] * blk.emask[:, None]
-    msg_rev = x[blk.edst] * blk.emask[:, None]
-    agg = _scatter_bidir(msg, msg_rev, blk, n, backend)
-    agg = sync.reduce_sum(agg)          # mirrors' partials -> masters
-    agg = sync.broadcast(agg)           # masters' totals  -> mirrors
+    agg = sync.edge_aggregate(
+        blk, x, lambda src, dst, mask: src * mask[:, None], backend=backend)
     mean = agg / jnp.maximum(blk.degree, 1.0)[:, None]
     h = x @ p["w_self"] + mean @ p["w_neigh"] + p["b"]
     return h if final else jax.nn.relu(h)
@@ -151,17 +127,13 @@ def sage_layer(p, x, blk, sync, *, final: bool,
 
 def gcn_layer(p, x, blk, sync, *, final: bool,
               backend: str = "scatter") -> jnp.ndarray:
-    n = x.shape[0]
     dnorm = 1.0 / jnp.sqrt(blk.degree + 1.0)  # self-loop-augmented degree
-    msg = (x * dnorm[:, None])[blk.esrc] * blk.emask[:, None]
-    msg_rev = (x * dnorm[:, None])[blk.edst] * blk.emask[:, None]
-    agg = _scatter_bidir(msg, msg_rev, blk, n, backend)
-    # Self-loop term once per vertex: gate by master so replicas don't
-    # double-count it in the cross-partition reduction.
-    self_term = x * (dnorm * dnorm)[:, None] * blk.master[:, None]
-    agg = agg + self_term
-    agg = sync.reduce_sum(agg)
-    agg = sync.broadcast(agg)
+    agg = sync.edge_aggregate(
+        blk, x * dnorm[:, None],
+        lambda src, dst, mask: src * mask[:, None], backend=backend)
+    # Self-loop term after completion: the completed aggregate and x are
+    # replica-consistent, so no master gating is needed.
+    agg = agg + x * (dnorm * dnorm)[:, None]
     h = (agg * dnorm[:, None]) @ p["w"] + p["b"]
     return h if final else jax.nn.relu(h)
 
@@ -176,44 +148,46 @@ def gat_layer(p, x, blk, sync, *, final: bool,
 
     neg_inf = jnp.asarray(-1e30, x.dtype)
 
-    def masked(e):
-        return jnp.where(blk.emask[:, None], e, neg_inf)
+    def score(src_s, dst):
+        # attention logit of an edge: src payload rows + the LOCAL dst table
+        return jax.nn.leaky_relu(src_s + s_dst[dst], 0.2)
 
-    # scores for u->v and v->u over the symmetrised edge list
-    e_fwd = masked(jax.nn.leaky_relu(s_src[blk.esrc] + s_dst[blk.edst], 0.2))
-    e_rev = masked(jax.nn.leaky_relu(s_src[blk.edst] + s_dst[blk.esrc], 0.2))
-    e_self = jnp.where(blk.master[:, None],
-                       jax.nn.leaky_relu(s_src + s_dst, 0.2), neg_inf)
-
-    # 1) global max per destination (for a stable softmax). Softmax is
-    # shift-invariant, so the stabilisation shift needs no gradient:
-    # stop_gradient is exact and keeps the backward free of any
-    # scatter-max / argmax transpose (see ops.aggregate).
-    m = _scatter_bidir(e_fwd, e_rev, blk, n, backend, reduce="max")
+    # 1) global max per destination (for a stable softmax). Rows no valid
+    # edge reaches come back at the -1e30 mask floor (scatter) or -inf
+    # (tiled/pallas drop masked edges) — the e_self/-1e29 clamps below make
+    # the backends agree exactly. Softmax is shift-invariant, so the shift
+    # needs no gradient: stop_gradient is exact and keeps the backward free
+    # of any scatter-max / argmax transpose (see ops.aggregate).
+    m = sync.edge_aggregate(
+        blk, s_src,
+        lambda src, dst, mask: jnp.where(mask[:, None], score(src, dst),
+                                         neg_inf),
+        reduce="max", backend=backend)
+    e_self = jax.nn.leaky_relu(s_src + s_dst, 0.2)
     m = jnp.maximum(m, e_self)
-    m = sync.reduce_max(m)
-    m = sync.broadcast(m)
     m_safe = jax.lax.stop_gradient(jnp.maximum(m, -1e29))  # isolated vertices
 
-    # 2) global sum of exp
-    w_fwd = jnp.exp(e_fwd - m_safe[blk.edst]) * blk.emask[:, None]
-    w_rev = jnp.exp(e_rev - m_safe[blk.esrc]) * blk.emask[:, None]
-    w_self = jnp.exp(e_self - m_safe) * blk.master[:, None]
-    den = _scatter_bidir(w_fwd, w_rev, blk, n, backend)
-    den = den + w_self
-    den = sync.reduce_sum(den)
-    den = sync.broadcast(den)
-    den = jnp.maximum(den, 1e-16)
+    # 2) global sum of exp (self term added post-completion, ungated:
+    # completed aggregates are replica-consistent)
+    den = sync.edge_aggregate(
+        blk, s_src,
+        lambda src, dst, mask: (jnp.exp(score(src, dst) - m_safe[dst])
+                                * mask[:, None]),
+        backend=backend)
+    w_self = jnp.exp(e_self - m_safe)
+    den = jnp.maximum(den + w_self, 1e-16)
 
-    # 3) attention-weighted aggregate
-    num = _scatter_bidir(
-        (w_fwd[:, :, None] * z[blk.esrc]).reshape(-1, h_heads * dh),
-        (w_rev[:, :, None] * z[blk.edst]).reshape(-1, h_heads * dh),
-        blk, n, backend,
-    ).reshape(n, h_heads, dh)
-    num = num + w_self[:, :, None] * z
-    num = sync.reduce_sum(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
-    num = sync.broadcast(num.reshape(n, h_heads * dh)).reshape(n, h_heads, dh)
+    # 3) attention-weighted aggregate; the payload carries [s_src | z] so a
+    # single rotation/gather serves both the weight and the message
+    payload = jnp.concatenate([s_src, z.reshape(n, h_heads * dh)], axis=1)
+
+    def weighted_msg(src, dst, mask):
+        w = jnp.exp(score(src[:, :h_heads], dst) - m_safe[dst]) * mask[:, None]
+        zf = src[:, h_heads:].reshape(-1, h_heads, dh)
+        return (w[:, :, None] * zf).reshape(-1, h_heads * dh)
+
+    num = sync.edge_aggregate(blk, payload, weighted_msg, backend=backend)
+    num = num.reshape(n, h_heads, dh) + w_self[:, :, None] * z
 
     out = (num / den[:, :, None]).reshape(n, h_heads * dh) + p["b"]
     out = out @ p["w_out"]

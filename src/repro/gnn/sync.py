@@ -1,23 +1,47 @@
-"""Replica-synchronisation strategies for edge-partitioned full-batch GNNs.
+"""Synchronisation strategies for distributed full-batch GNNs.
 
-Three interchangeable implementations of the same contract (complete the
-partial aggregates that per-partition scatter-sums produce):
+The `SyncStrategy` protocol is ONE method every model layer builds on:
 
-  LocalSync  — no-op; correct only for k=1. The single-machine oracle.
-  DenseSync  — scatter into a global [V, d] buffer and `psum` it. Volume is
-               O(V·d) per sync, *independent of partitioning quality*. This
-               is the naive baseline the halo exchange is measured against.
-  HaloSync   — static-routed all_to_all using the partition book's replica
-               lists. One reduce+broadcast pair moves 2·k·B·d elements per
-               device (B = max pair bucket) = 2·k²·B·d·4 bytes cluster-wide
-               (`sync_bytes_per_round`, pinned against the compiled HLO in
-               tests/test_dist_lowering.py). The volume tracks the
-               replication factor — the paper's key mechanism, expressed in
-               XLA-compilable form (DESIGN.md §2).
+    edge_aggregate(blk, payload, msg_fn, *, reduce, backend) -> [Vloc+1, d]
 
-All three work identically under `jax.vmap(axis_name=...)` (CPU simulation of
-k workers) and `jax.shard_map` (real meshes / the multi-pod dry-run), because
-they only use axis-name collectives.
+Give it per-vertex payload rows and a message function
+`msg_fn(src_rows, dst_idx, edge_mask) -> [E, d]`; it returns the COMPLETE
+(globally consistent) per-destination aggregate over the symmetrised
+adjacency. `psum(v)` completes scalars (the loss). How completion happens —
+and what it costs — is the strategy:
+
+  LocalSync  — k=1 oracle: one local `ops.aggregate` pass, nothing moves.
+  DenseSync  — aggregate locally, scatter into a global [V+1, d] buffer and
+               `psum` it. Volume O(V·d) per sync, *independent of
+               partitioning quality* — the naive baseline.
+  HaloSync   — aggregate locally, then complete replicas via static-routed
+               all_to_all from the partition book's replica lists. One
+               reduce+broadcast pair moves 2·k·B·d elements per device
+               (B = max pair bucket) = 2·k²·B·d·4 bytes cluster-wide
+               (`sync_bytes_per_round`, pinned against compiled HLO in
+               tests/test_dist_lowering.py). Volume tracks the replication
+               factor — the paper's key mechanism (DESIGN.md §2).
+  RingSync   — 1.5D block rotation (CAGNET regime, `BlockRowBook`): no
+               replicas exist, so nothing is "completed" — instead the
+               payload blocks rotate around a `lax.ppermute` ring. Stage s
+               aggregates the pre-rotated edge chunk (dst local, src in the
+               currently-held block) while the next block is in flight:
+               k−1 `ppermute` stages of (V/k + 1)·d elements each per
+               device, i.e. k·(k−1)·(V/k + 1)·d·4 bytes cluster-wide per
+               aggregate — compare halo's 2·k²·B·d·4 (replication-
+               dependent) and dense's 2·k·(V+1)·d·4 (always worst-case).
+               Per round, ring < dense for every k ≥ 2 since
+               (k−1)/k · V < 2·V; no second broadcast pass is needed
+               because block rows are owned exactly once.
+
+Local/Dense/Halo additionally keep their historical low-level surface
+(`reduce_sum` / `reduce_max` / `broadcast`) — partial-aggregate completion —
+which `edge_aggregate` composes; RingSync has no such decomposition (the
+communication IS the aggregation loop).
+
+All strategies work identically under `jax.vmap(axis_name=...)` (CPU
+simulation of k workers) and `jax.shard_map` (real meshes / the multi-pod
+dry-run), because they only use axis-name collectives.
 """
 
 from __future__ import annotations
@@ -29,7 +53,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition_book import EdgePartitionBook
+from repro.core.partition_book import BlockRowBook, EdgePartitionBook
+from repro.kernels import ops
 
 
 class Block(NamedTuple):
@@ -94,10 +119,41 @@ def build_blocks(
 
 
 # ---------------------------------------------------------------------------
+# SyncStrategy protocol
+# ---------------------------------------------------------------------------
+
+
+class _PartialAggSync:
+    """Shared `edge_aggregate` for the partial-aggregate family.
+
+    Local/Dense/Halo all follow the same recipe: reduce messages over the
+    symmetrised local edge list (both directions of every stored edge, via
+    `ops.aggregate` so scatter/tiled/pallas backends all serve), then
+    complete the per-partition partials with the strategy's reduce+broadcast
+    pair. `msg_fn(src_rows, dst_idx, edge_mask)` sees the payload rows
+    gathered at the edge's source and the LOCAL destination index (for
+    destination-side tables such as GAT's softmax shift).
+    """
+
+    def edge_aggregate(self, blk: "Block", payload, msg_fn, *,
+                       reduce: str = "sum", backend: str = "scatter"):
+        n = payload.shape[0]
+        messages = jnp.concatenate([
+            msg_fn(payload[blk.esrc], blk.edst, blk.emask),
+            msg_fn(payload[blk.edst], blk.esrc, blk.emask),
+        ], axis=0)
+        dst = jnp.concatenate([blk.edst, blk.esrc], axis=0)
+        agg = ops.aggregate(
+            messages, dst, n,
+            edge_order=blk.agg_order, local_dst=blk.agg_ldst,
+            backend=backend, reduce=reduce,
+        )
+        agg = self.reduce_max(agg) if reduce == "max" else self.reduce_sum(agg)
+        return self.broadcast(agg)
 
 
 @dataclasses.dataclass(frozen=True)
-class LocalSync:
+class LocalSync(_PartialAggSync):
     """k=1: partial aggregates are already complete."""
 
     def reduce_sum(self, h):
@@ -114,7 +170,7 @@ class LocalSync:
 
 
 @dataclasses.dataclass(frozen=True)
-class DenseSync:
+class DenseSync(_PartialAggSync):
     """Naive baseline: materialise the global vertex state and psum it."""
 
     blk: Block
@@ -145,7 +201,7 @@ class DenseSync:
 
 
 @dataclasses.dataclass(frozen=True)
-class HaloSync:
+class HaloSync(_PartialAggSync):
     """Static-routed replica synchronisation (the paper-faithful path).
 
     reduce_*: every mirror packs its partial rows for each master partition
@@ -185,20 +241,148 @@ class HaloSync:
         return jax.lax.psum(v, self.axis)
 
 
-def make_sync(mode: str, blk: Block, num_vertices: int, axis: str):
+# ---------------------------------------------------------------------------
+# RingSync (1.5D block rotation over a BlockRowBook)
+# ---------------------------------------------------------------------------
+
+
+class RingBlock(NamedTuple):
+    """One block row's static device state (stacked [k, ...] for SPMD).
+
+    Same row layout as `Block` (dummy row at index v_block) so the model
+    code is identical; the halo routing tables are replaced by the
+    pre-rotated ring chunks.
+    """
+
+    x: jnp.ndarray            # [Vb+1, F] features of the OWNED block
+    labels: jnp.ndarray       # [Vb+1] int32 (-1 pad)
+    train_mask: jnp.ndarray   # [Vb+1] bool
+    degree: jnp.ndarray       # [Vb+1] float32 global symmetric degree
+    master: jnp.ndarray       # [Vb+1] bool (== vmask: single-owner layout)
+    vmask: jnp.ndarray        # [Vb+1] bool
+    vglobal: jnp.ndarray      # [Vb+1] int32 (pad -> V)
+    # pre-rotated edge chunks: row s = the directed edges whose src lives in
+    # the block this device holds at ring stage s (dst indices are local)
+    chunk_esrc: jnp.ndarray   # [k, c_max] int32 (pad -> Vb dummy row)
+    chunk_edst: jnp.ndarray   # [k, c_max] int32
+    chunk_emask: jnp.ndarray  # [k, c_max] bool
+    # per-chunk tiled layouts ([k, 0] when built without tiled_layout)
+    chunk_agg_order: jnp.ndarray  # [k, E_tiled] int32
+    chunk_agg_ldst: jnp.ndarray   # [k, E_tiled] int32
+
+
+def build_ring_blocks(
+    book: BlockRowBook,
+    features: np.ndarray,
+    labels: np.ndarray,
+    train_mask: np.ndarray,
+) -> RingBlock:
+    """Stacked [k, ...] RingBlock from a 1.5D book + global node data."""
+    x = book.local_features(features.astype(np.float32))
+    lab = book.local_labels(labels.astype(np.int32))
+    tm = np.zeros((book.k, book.v_block + 1), dtype=bool)
+    safe = np.where(book.vglobal >= 0, book.vglobal, 0)
+    tm[:] = train_mask[safe]
+    tm &= book.vmask
+    vg = np.where(book.vglobal >= 0, book.vglobal, book.num_vertices)
+    return RingBlock(
+        x=jnp.asarray(x),
+        labels=jnp.asarray(lab),
+        train_mask=jnp.asarray(tm),
+        degree=jnp.asarray(book.degree),
+        master=jnp.asarray(book.vmask),
+        vmask=jnp.asarray(book.vmask),
+        vglobal=jnp.asarray(vg.astype(np.int32)),
+        chunk_esrc=jnp.asarray(book.chunk_esrc),
+        chunk_edst=jnp.asarray(book.chunk_edst),
+        chunk_emask=jnp.asarray(book.chunk_emask),
+        chunk_agg_order=jnp.asarray(book.chunk_agg_order),
+        chunk_agg_ldst=jnp.asarray(book.chunk_agg_ldst),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSync:
+    """1.5D ring-pipelined aggregation (CAGNET-style block rotation).
+
+    At stage s device p holds block (p+s) mod k of the payload; the matching
+    pre-rotated chunk (static index s — no dynamic gather of chunk tables)
+    is aggregated locally while `lax.ppermute` ships the NEXT block, so the
+    transfer overlaps the segment-SpMM. k−1 permutes of [Vb+1, d] per
+    aggregate; no reduce/broadcast pair exists because every row is owned
+    exactly once.
+    """
+
+    axis: str
+    k: int
+
+    def _perm(self):
+        # device j hands its current block to j-1: after s hops, device p
+        # holds block (p+s) mod k — matching chunk (p, s)'s src block
+        return [(j, (j - 1) % self.k) for j in range(self.k)]
+
+    def edge_aggregate(self, blk: RingBlock, payload, msg_fn, *,
+                       reduce: str = "sum", backend: str = "scatter"):
+        n = payload.shape[0]
+        tiled = blk.chunk_agg_order.shape[-1] > 0
+        buf = payload
+        acc = None
+        for s in range(self.k):
+            # issue the transfer BEFORE this stage's compute: XLA schedules
+            # the collective-permute-start/done pair around the SpMM
+            nxt = (jax.lax.ppermute(buf, self.axis, self._perm())
+                   if s < self.k - 1 else None)
+            messages = msg_fn(buf[blk.chunk_esrc[s]], blk.chunk_edst[s],
+                              blk.chunk_emask[s])
+            part = ops.aggregate(
+                messages, blk.chunk_edst[s], n,
+                edge_order=blk.chunk_agg_order[s] if tiled else None,
+                local_dst=blk.chunk_agg_ldst[s] if tiled else None,
+                backend=backend, reduce=reduce,
+            )
+            if acc is None:
+                acc = part
+            else:
+                acc = jnp.maximum(acc, part) if reduce == "max" else acc + part
+            if nxt is not None:
+                buf = nxt
+        return acc
+
+    def psum(self, v):
+        if self.k == 1:
+            return v
+        return jax.lax.psum(v, self.axis)
+
+
+SYNC_MODES = ("local", "dense", "halo", "ring")
+
+
+def make_sync(mode: str, blk, num_vertices: int, axis: str):
+    """Instantiate a SyncStrategy. `blk` is a `Block` for local/dense/halo
+    and a `RingBlock` for ring (1.5D layouts have no halo tables)."""
     if mode == "local":
         return LocalSync()
     if mode == "dense":
         return DenseSync(blk=blk, num_vertices=num_vertices, axis=axis)
     if mode == "halo":
         return HaloSync(blk=blk, axis=axis)
-    raise ValueError(f"unknown sync mode {mode!r}")
+    if mode == "ring":
+        if not isinstance(blk, RingBlock):
+            raise TypeError(
+                "sync mode 'ring' needs a RingBlock (build_ring_blocks over "
+                f"a BlockRowBook); got {type(blk).__name__}")
+        return RingSync(axis=axis, k=int(blk.chunk_esrc.shape[0]))
+    raise ValueError(
+        f"unknown sync mode {mode!r}: valid strategies are "
+        f"{', '.join(SYNC_MODES)}")
 
 
-def sync_bytes_per_round(book: EdgePartitionBook, d: int, mode: str) -> int:
-    """Analytic collective volume of ONE reduce+broadcast pair, all devices.
+def sync_bytes_per_round(book, d: int, mode: str) -> int:
+    """Analytic collective volume of ONE complete aggregate, all devices.
 
-    Used by the study harness and checked against the dry-run HLO.
+    For halo/dense that is a reduce+broadcast pair; for ring it is the k−1
+    `ppermute` stages. Used by the study harness and checked against the
+    dry-run HLO (tests/test_dist_lowering.py).
     """
     if mode == "halo":
         # each of k devices sends a [k, B, d] f32 buffer per all_to_all and a
@@ -208,4 +392,14 @@ def sync_bytes_per_round(book: EdgePartitionBook, d: int, mode: str) -> int:
     if mode == "dense":
         # psum of [V+1, d] on k devices (ring all-reduce ~ 2x payload)
         return 2 * book.k * (book.num_vertices + 1) * d * 4
+    if mode == "ring":
+        # k-1 ppermute stages, each device shipping its [Vb+1, d] f32 block
+        if not isinstance(book, BlockRowBook):
+            raise TypeError("ring volume needs a BlockRowBook")
+        return book.k * (book.k - 1) * (book.v_block + 1) * d * 4
     return 0
+
+
+def ring_bytes_per_round(book: BlockRowBook, d: int) -> int:
+    """Cluster-wide `ppermute` bytes of one ring aggregate (k·(k−1)·(Vb+1)·d·4)."""
+    return sync_bytes_per_round(book, d, "ring")

@@ -42,7 +42,13 @@ def main() -> None:
     ap.add_argument("--classes", type=int, default=16)
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--sync", default="halo", choices=["halo", "dense"])
+    ap.add_argument("--sync-mode", "--sync", dest="sync_mode", default="halo",
+                    choices=["halo", "dense", "ring"],
+                    help="full-batch sync strategy (gnn/sync.py): halo = "
+                         "static-routed replica exchange, dense = global "
+                         "psum baseline, ring = 1.5D ppermute block "
+                         "rotation (ignores --partitioner: the blockrow "
+                         "layout needs no partitioning pass)")
     ap.add_argument("--agg-backend", default="scatter",
                     choices=["scatter", "tiled", "pallas"],
                     help="aggregation backend (kernels.ops.aggregate): "
@@ -83,17 +89,23 @@ def main() -> None:
 
     t0 = time.perf_counter()
     if args.regime == "fullbatch":
-        assert args.partitioner in EDGE_PARTITIONERS, (
+        partitioner = args.partitioner
+        if args.sync_mode == "ring":
+            # 1.5D: contiguous blockrow layout, no partitioning heuristic —
+            # the near-zero partition time IS the regime's selling point
+            partitioner = "blockrow"
+        assert partitioner in EDGE_PARTITIONERS, (
             f"full-batch (DistGNN) uses edge partitioners: "
             f"{sorted(EDGE_PARTITIONERS)}")
-        assignment = partition_edges(g, args.k, args.partitioner, seed=args.seed)
+        assignment = partition_edges(g, args.k, partitioner, seed=args.seed)
         pt = time.perf_counter() - t0
         m = edge_partition_metrics(g, assignment, args.k)
-        print(f"[gnn] partitioned in {pt:.2f}s: rf={m.replication_factor:.2f} "
+        print(f"[gnn] partitioned in {pt:.2f}s ({partitioner}): "
+              f"rf={m.replication_factor:.2f} "
               f"edge_bal={m.edge_balance:.2f} vertex_bal={m.vertex_balance:.2f}")
         tr = FullBatchTrainer.build(
             g, assignment, args.k, spec, feats, labels, train_mask,
-            sync_mode=args.sync, mode="sim", seed=args.seed,
+            sync_mode=args.sync_mode, mode="sim", seed=args.seed,
         )
         est = cost_model.fullbatch_epoch(tr.book, spec)
         print(f"[gnn] paper-cluster epoch estimate: {est.epoch_time*1e3:.1f} ms, "
@@ -108,8 +120,9 @@ def main() -> None:
                   f"({time.perf_counter()-t1:.2f}s)")
         if args.out_json:
             row = study.fullbatch_result_row(
-                args.graph, args.partitioner, args.k, spec,
-                metrics=m, partition_time=pt, est=est)
+                args.graph, partitioner, args.k, spec,
+                metrics=m, partition_time=pt, est=est,
+                sync_mode=args.sync_mode)
             row["loss"] = loss
             study.write_rows([row], args.out_json)
             print(f"[gnn] wrote study row -> {args.out_json}")

@@ -1,0 +1,130 @@
+"""int8 gradient compression with error feedback (optim/compress.py).
+
+Groundwork for the compressed-communication roadmap item: the quantiser's
+per-tensor scale bounds the roundtrip error, and the error-feedback
+accumulator carries the residual so repeated compression does not bias the
+running gradient sum.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compress import (
+    compress,
+    compress_init,
+    compressed_psum,
+    decompress,
+)
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "w": jnp.asarray(rng.normal(size=(32, 16)) * scale, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(16,)) * scale, jnp.float32),
+    }
+
+
+def test_roundtrip_tolerance():
+    """One compress/decompress roundtrip is within half a quantisation bin:
+    |x - deq(q(x))| <= scale/2 = max|x| / 254 per tensor."""
+    rng = np.random.default_rng(0)
+    grads = _tree(rng)
+    qs, scales, _ = compress(grads, compress_init(grads))
+    deq = decompress(qs, scales)
+    for key in grads:
+        g = np.asarray(grads[key])
+        bound = np.abs(g).max() / 127.0 / 2.0 + 1e-7
+        err = np.abs(np.asarray(deq[key]) - g).max()
+        assert err <= bound, (key, err, bound)
+
+
+def test_roundtrip_dtypes_and_scale_positivity():
+    rng = np.random.default_rng(1)
+    grads = _tree(rng, scale=1e-3)
+    qs, scales, state = compress(grads, compress_init(grads))
+    for key in grads:
+        assert np.asarray(qs[key]).dtype == np.int8
+        assert float(np.asarray(scales[key])) > 0.0
+        assert np.asarray(state.error[key]).shape == grads[key].shape
+
+
+def test_zero_gradient_is_exact():
+    grads = {"w": jnp.zeros((8, 8), jnp.float32)}
+    qs, scales, state = compress(grads, compress_init(grads))
+    deq = decompress(qs, scales)
+    np.testing.assert_array_equal(np.asarray(deq["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(state.error["w"]), 0.0)
+
+
+def test_error_feedback_accumulator_reduces_bias():
+    """Feeding the SAME gradient repeatedly: with error feedback the running
+    mean of dequantised outputs converges to the true gradient (residual is
+    carried, not dropped), so the accumulated bias is strictly smaller than
+    the no-feedback quantiser's."""
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    steps = 32
+
+    state = compress_init(g)
+    total_fb = np.zeros(64)
+    total_nofb = np.zeros(64)
+    for _ in range(steps):
+        qs, scales, state = compress(g, state)
+        total_fb += np.asarray(decompress(qs, scales)["w"])
+        qs0, scales0, _ = compress(g, compress_init(g))
+        total_nofb += np.asarray(decompress(qs0, scales0)["w"])
+
+    true = np.asarray(g["w"]) * steps
+    err_fb = np.abs(total_fb - true).max()
+    err_nofb = np.abs(total_nofb - true).max()
+    # error feedback keeps the accumulated error bounded by ~one bin, while
+    # the no-feedback error grows linearly in steps (same sign each step)
+    one_bin = np.abs(np.asarray(g["w"])).max() / 127.0
+    assert err_fb <= 2 * one_bin, (err_fb, one_bin)
+    assert err_fb < err_nofb, (err_fb, err_nofb)
+
+
+def test_error_state_carried_across_steps():
+    """The residual of step t shows up in step t+1's quantisation input."""
+    g = {"w": jnp.asarray([0.4, -0.7, 1.0], jnp.float32)}
+    state0 = compress_init(g)
+    qs, scales, state1 = compress(g, state0)
+    resid = np.asarray(g["w"]) - (
+        np.asarray(qs["w"]).astype(np.float32) * float(np.asarray(scales["w"]))
+    )
+    np.testing.assert_allclose(np.asarray(state1.error["w"]), resid,
+                               rtol=1e-6, atol=1e-7)
+    # second step quantises g + residual, so its residual differs unless the
+    # residual was exactly zero
+    _, _, state2 = compress(g, state1)
+    assert not np.allclose(np.asarray(state2.error["w"]),
+                           np.asarray(state1.error["w"]), atol=1e-9) or \
+        np.allclose(resid, 0.0, atol=1e-9)
+
+
+def test_compressed_psum_under_vmap():
+    """compressed_psum == pmean of the dequantised views, per-worker error
+    states kept independent — the data-parallel wiring the roadmap's
+    cross-pod compression uses."""
+    k = 4
+    rng = np.random.default_rng(3)
+    grads = {"w": jnp.asarray(rng.normal(size=(k, 16)), jnp.float32)}
+    states = jax.vmap(lambda g: compress_init({"w": g}))(grads["w"])
+
+    def per_worker(g, err):
+        state = type(states)(error={"w": err})
+        summed, new_state = compressed_psum({"w": g}, state, "dp")
+        return summed["w"], new_state.error["w"]
+
+    mean, new_err = jax.vmap(per_worker, axis_name="dp")(
+        grads["w"], states.error["w"])
+    # every worker holds the same mean
+    np.testing.assert_allclose(np.asarray(mean[0]), np.asarray(mean[-1]),
+                               rtol=1e-6, atol=1e-7)
+    true_mean = np.asarray(grads["w"]).mean(axis=0)
+    bin_bound = np.abs(np.asarray(grads["w"])).max() / 127.0
+    assert np.abs(np.asarray(mean[0]) - true_mean).max() <= bin_bound
+    # error states stay per-worker (not collectively reduced)
+    assert np.asarray(new_err).shape == (k, 16)
