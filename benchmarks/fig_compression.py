@@ -1,0 +1,188 @@
+"""Wire-compression frontier: partitioner x codec, mini-batch regime.
+
+The paper ranks partitioners by how many bytes they keep off the network;
+a wire codec (core/wire.py) attacks the same bytes from the other side.
+This figure trains REAL mini-batch steps for every {random, metis} x
+{fp32, bf16, int8, variable} cell and reports:
+
+  * the accuracy-vs-traffic frontier: short-run training loss against the
+    measured encoded bytes each step actually shipped (a lossy codec moves
+    a cell left on the traffic axis at some loss cost; a better partitioner
+    moves it left at partition-time cost);
+  * the fixed-time-budget crossover between the two strategies' extremes —
+    random+int8 (no partition pass, quarter-width wire) vs metis+fp32
+    (expensive pass, exact wire): with partition time pt and modeled epoch
+    time et, random wins every budget below
+        T* = (pt_m * et_r - pt_r * et_m) / (et_r - et_m)
+    (the classic amortization break-even, tab3's question asked across the
+    codec axis instead of across partitioners).
+
+Claims checked in the smoke:
+  * fp32 rows ship exactly their logical bytes (wire == fetch, every cell)
+  * int8 rows ship < 0.3x their logical bytes
+  * int8's short-run loss stays within 0.05 of fp32's on the same batches
+  * the budget table emits and names a winner per budget
+
+`--out-json` / `--out-csv` write the study-format rows + the printed CSV —
+the CI artifacts. `--smoke` (or run.py --smoke / BENCH_FAST=1) keeps the
+trimmed grid.
+"""
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import FAST, SCALE, cache, emit
+from repro.core import cost_model
+from repro.core.study import host_phase_means, minibatch_result_row, write_rows
+from repro.core.wire import CODECS
+from repro.gnn.minibatch import MiniBatchTrainer
+from repro.gnn.models import GNNSpec
+
+GRAPH = "OR"
+METHODS = ("random", "metis")
+SMOKE = FAST or "--smoke" in sys.argv
+COMP_SCALE = 0.02 if SMOKE else SCALE
+KS = (4,) if SMOKE else (4, 8)
+STEPS = 8 if SMOKE else 24
+LOSS_TOL = 0.05
+
+
+def _train_cell(g, rec, k, spec, feats, labels, train_mask, codec, batch):
+    """Train STEPS real steps under `codec`; return (row, mean_tail_loss)."""
+    tr = MiniBatchTrainer.build(
+        g, rec.assignment, k, spec, feats, labels, train_mask,
+        global_batch=batch, seed=0, codec=codec,
+    )
+    ms = [tr.train_step() for _ in range(STEPS)]
+    tr.close()
+    inputs = np.stack([m.input_vertices for m in ms]).mean(axis=0)
+    remote = np.stack([m.remote_vertices for m in ms]).mean(axis=0)
+    edges = np.stack([m.edges for m in ms]).mean(axis=0)
+    hits = np.stack([m.cache_hits for m in ms]).mean(axis=0)
+    misses = np.stack([m.remote_misses for m in ms]).mean(axis=0)
+    est = cost_model.minibatch_step(
+        inputs, remote, edges, rec.book.sizes.astype(np.float64), spec,
+        seeds_per_worker=max(batch // k, 1),
+        remote_miss_vertices=misses, cached_vertices=tr.store.cache_sizes,
+        codec=codec,
+    )
+    steps_per_epoch = max(int(train_mask.sum()) // batch, 1)
+    row = minibatch_result_row(
+        GRAPH, rec.method, k, spec, metrics=rec.metrics,
+        partition_time=rec.partition_time, batch=batch,
+        inputs=inputs, remote=remote, hits=hits, misses=misses,
+        est=est, steps_per_epoch=steps_per_epoch,
+        host_times=host_phase_means(ms), codec=codec,
+    )
+    # the measured (not modeled) encoded bytes the feature store shipped
+    row["measured_wire_bytes"] = float(
+        np.stack([m.wire_bytes for m in ms]).mean(axis=0).sum())
+    row["measured_miss_bytes"] = float(
+        np.stack([m.miss_bytes for m in ms]).mean(axis=0).sum())
+    tail = [m.loss for m in ms[max(STEPS - 3, 0):]]
+    row["loss"] = float(np.mean(tail))
+    return row, row["loss"]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")  # grid set by env/common
+    ap.add_argument("--out-json", default="")
+    ap.add_argument("--out-csv", default="")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    c = cache()
+    g = c.graph(GRAPH, COMP_SCALE, 0)
+    spec = GNNSpec(model="sage", feature_dim=32, hidden_dim=32,
+                   num_classes=8, num_layers=2)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_vertices, 32)).astype(np.float32)
+    labels = rng.integers(0, 8, g.num_vertices).astype(np.int32)
+    train_mask = rng.random(g.num_vertices) < 0.3
+    batch = 64 if SMOKE else 256
+
+    rows, csv_lines = [], []
+
+    def emit2(name, seconds, derived):
+        emit(name, seconds, derived)
+        csv_lines.append(f"{name},{seconds * 1e6:.1f},{derived}")
+
+    claims_ok = True
+    cells = {}
+    for k in KS:
+        losses = {}
+        for method in METHODS:
+            rec = c.vertex_partition(g, method, k, 0, train_mask)
+            for codec in CODECS:
+                row, loss = _train_cell(g, rec, k, spec, feats, labels,
+                                        train_mask, codec, batch)
+                rows.append(row)
+                cells[(k, method, codec)] = row
+                losses[(method, codec)] = loss
+                emit2(f"fig_compression.train.{GRAPH}.k{k}.{method}.{codec}",
+                      row["step_time"],
+                      f"loss={loss:.4f};"
+                      f"wire_bytes={row['measured_wire_bytes']:.0f};"
+                      f"miss_bytes={row['measured_miss_bytes']:.0f};"
+                      f"epoch_time_ms={row['epoch_time'] * 1e3:.2f}")
+            fp32 = cells[(k, method, "fp32")]
+            int8 = cells[(k, method, "int8")]
+            exact = (fp32["measured_wire_bytes"]
+                     == fp32["measured_miss_bytes"])
+            shrink = (int8["measured_wire_bytes"]
+                      < 0.3 * int8["measured_miss_bytes"])
+            dev = abs(losses[(method, "int8")] - losses[(method, "fp32")])
+            close = dev < LOSS_TOL
+            claims_ok &= exact and shrink and close
+            emit2(f"fig_compression.pins.{GRAPH}.k{k}.{method}", 0.0,
+                  f"fp32_exact={exact};int8_shrinks={shrink};"
+                  f"int8_loss_dev={dev:.4f};within_tol={close}")
+
+        # fixed-time-budget crossover: random+int8 vs metis+fp32
+        r8 = cells[(k, "random", "int8")]
+        mf = cells[(k, "metis", "fp32")]
+        pt_r, et_r = r8["partition_time"], r8["epoch_time"]
+        pt_m, et_m = mf["partition_time"], mf["epoch_time"]
+        if et_r > et_m:
+            t_star = (pt_m * et_r - pt_r * et_m) / (et_r - et_m)
+        else:
+            # random+int8's epochs are no slower AND its pass is cheaper:
+            # it wins every finite budget
+            t_star = float("inf")
+        emit2(f"fig_compression.crossover.{GRAPH}.k{k}", 0.0,
+              f"t_star_s={t_star:.4f};"
+              f"random_int8_pt={pt_r:.4f};random_int8_epoch={et_r:.6f};"
+              f"metis_fp32_pt={pt_m:.4f};metis_fp32_epoch={et_m:.6f}")
+        budget_rows = 0
+        for mult in (2.0, 8.0, 32.0):
+            budget = mult * (pt_m + et_m)  # scaled off the slow-start config
+            ep_r = max((budget - pt_r) / et_r, 0.0)
+            ep_m = max((budget - pt_m) / et_m, 0.0)
+            winner = "random+int8" if ep_r >= ep_m else "metis+fp32"
+            emit2(f"fig_compression.budget.{GRAPH}.k{k}.x{mult:g}", 0.0,
+                  f"budget_s={budget:.4f};epochs_random_int8={ep_r:.2f};"
+                  f"epochs_metis_fp32={ep_m:.2f};winner={winner}")
+            rows.append({
+                "graph": GRAPH, "k": k, "regime": "budget",
+                "budget_s": budget, "t_star_s": t_star,
+                "epochs_random_int8": ep_r, "epochs_metis_fp32": ep_m,
+                "winner": winner,
+            })
+            budget_rows += 1
+        claims_ok &= budget_rows == 3
+
+    emit2("fig_compression.claims", 0.0, f"all_pinned={claims_ok}")
+    if args.out_json:
+        write_rows(rows, args.out_json)
+    if args.out_csv:
+        with open(args.out_csv, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.write("\n".join(csv_lines) + "\n")
+    if not claims_ok:
+        raise SystemExit("fig_compression: codec pin failed")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -153,7 +153,7 @@ def sync_mode_bench() -> None:
     from repro.core.graph import paper_graph
     from repro.gnn.fullbatch import FullBatchTrainer
     from repro.gnn.models import GNNSpec
-    from repro.gnn.sync import sync_bytes_per_round
+    from repro.gnn.sync import sync_bytes_per_round, sync_wire_bytes_per_round
 
     g = paper_graph("OR", scale=AGG_SCALE, seed=0)
     rng = np.random.default_rng(0)
@@ -171,7 +171,19 @@ def sync_mode_bench() -> None:
             feats, labels, train, sync_mode=mode, seed=0)
         times[mode] = _time_steps(tr.train_step)
         emit(f"roofline.sync.fullbatch.sage.k{k}.{mode}", times[mode],
-             f"round_bytes={sync_bytes_per_round(tr.book, spec.hidden_dim, mode)}")
+             f"codec=fp32;"
+             f"round_bytes={sync_bytes_per_round(tr.book, spec.hidden_dim, mode)};"
+             f"wire_bytes={sync_wire_bytes_per_round(tr.book, spec.hidden_dim, mode)}")
+    # the compressed-wire point: same ring step trained through the int8+EF
+    # codec — the wire column shrinks ~4x while round_bytes stays logical
+    tr8 = FullBatchTrainer.build(
+        g, None, k, spec, feats, labels, train,
+        sync_mode="ring", seed=0, codec="int8")
+    t8 = _time_steps(tr8.train_step)
+    emit(f"roofline.sync.fullbatch.sage.k{k}.ring_int8", t8,
+         f"codec=int8;"
+         f"round_bytes={sync_bytes_per_round(tr8.book, spec.hidden_dim, 'ring')};"
+         f"wire_bytes={sync_wire_bytes_per_round(tr8.book, spec.hidden_dim, 'ring', codec='int8')}")
     emit(f"roofline.sync.fullbatch.sage.k{k}.speedup", 0.0,
          f"halo_over_ring={times['halo'] / times['ring']:.3f};"
          f"dense_over_ring={times['dense'] / times['ring']:.3f}")

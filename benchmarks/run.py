@@ -1,6 +1,6 @@
 """Run every paper-figure/table benchmark. Prints name,us_per_call,derived
-CSV. One module per paper artifact (DESIGN.md §8); roofline reads the
-dry-run cache.
+CSV. One module per paper artifact (see the README's benchmark table);
+roofline reads the dry-run cache.
 
 Flags:
   --smoke        seconds-fast CI path: trimmed grids (BENCH_FAST=1) at a
@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.fig_cache_sweep",
     "benchmarks.fig_serving",
     "benchmarks.fig_ring_scaleout",
+    "benchmarks.fig_compression",
     "benchmarks.roofline",
 ]
 

@@ -21,6 +21,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.partition_book import BlockRowBook, EdgePartitionBook
+from repro.core.wire import as_codec
 from repro.gnn.models import GNNSpec
 
 __all__ = [
@@ -92,6 +93,18 @@ def _agg_bytes_per_edge(spec: GNNSpec) -> float:
     return float(sum(3 * 4 * d for d in dims))
 
 
+def _wire_elem(codec, layer: int = 0) -> float:
+    """Per-element wire bytes under `codec` (f32 logical elements).
+
+    Analytic-model granularity: the O(1) per-tensor metadata (one f32 scale
+    for int8) is dropped here; the exact per-tensor accounting lives in
+    `Codec.wire_bytes` / `gnn.sync.sync_wire_bytes_per_round`. With the
+    default codec (fp32) this is exactly 4.0, so every estimate below is
+    float-identical to the pre-codec model.
+    """
+    return 4.0 * as_codec(codec).ratio(layer)
+
+
 @dataclasses.dataclass(frozen=True)
 class FullBatchEstimate:
     epoch_time: float
@@ -100,6 +113,9 @@ class FullBatchEstimate:
     comm_bytes: np.ndarray       # [k] true (unpadded) replica-sync traffic
     memory: np.ndarray           # [k] bytes
     oom: bool
+    # [k] encoded bytes actually crossing the network under the codec the
+    # estimate was priced with; == comm_bytes for lossless/fp32 codecs.
+    wire_bytes: Optional[np.ndarray] = None
 
 
 def ring_bytes_per_round(book: BlockRowBook, d: int) -> int:
@@ -119,6 +135,7 @@ def _ring_epoch(
     book: BlockRowBook,
     spec: GNNSpec,
     cluster: ClusterSpec,
+    codec=None,
 ) -> FullBatchEstimate:
     """Overlap-aware 1.5D ring epoch estimate.
 
@@ -139,13 +156,19 @@ def _ring_epoch(
     compute = agg_bytes / cluster.mem_bw + nn_flops / cluster.flops
 
     dims = [dout for _, dout in spec.dims()]
-    syncs = (3 if spec.model == "gat" else 1) * 2  # per layer, fwd+bwd
+    aggs_per_layer = 3 if spec.model == "gat" else 1
+    syncs = aggs_per_layer * 2  # per layer, fwd+bwd
     stage_rows = float(book.v_block + 1)
     comm_bytes = np.full(k, (k - 1) * stage_rows * 4 * sum(dims) * syncs)
+    wire_bytes = np.zeros(k)
+    for li, d in enumerate(dims):
+        eb = _wire_elem(codec, li * aggs_per_layer)
+        wire_bytes += (k - 1) * stage_rows * eb * d * syncs
     comm = np.zeros(k)
     if k > 1:
-        for d in dims:
-            t_stage = (stage_rows * d * 4 / cluster.net_bw
+        for li, d in enumerate(dims):
+            eb = _wire_elem(codec, li * aggs_per_layer)
+            t_stage = (stage_rows * d * eb / cluster.net_bw
                        + cluster.net_latency)
             # per-stage chunk compute: this layer's aggregation share of the
             # memory-bound traffic, spread over the k chunks
@@ -168,6 +191,7 @@ def _ring_epoch(
         comm_bytes=comm_bytes,
         memory=memory,
         oom=bool((memory > cluster.memory).any()),
+        wire_bytes=wire_bytes,
     )
 
 
@@ -175,6 +199,7 @@ def fullbatch_epoch(
     book,
     spec: GNNSpec,
     cluster: ClusterSpec = PAPER_CLUSTER,
+    codec=None,
 ) -> FullBatchEstimate:
     """Full-batch epoch estimate from a real partition book.
 
@@ -190,7 +215,7 @@ def fullbatch_epoch(
     volume with the transfer overlapped against per-chunk compute.
     """
     if isinstance(book, BlockRowBook):
-        return _ring_epoch(book, spec, cluster)
+        return _ring_epoch(book, spec, cluster, codec)
     k = book.k
     edges = book.emask.sum(axis=1).astype(np.float64)
     verts = book.vmask.sum(axis=1).astype(np.float64)
@@ -205,12 +230,15 @@ def fullbatch_epoch(
     send_rows = book.send_mask.sum(axis=(1, 2)).astype(np.float64)
     recv_rows = book.recv_mask.sum(axis=(1, 2)).astype(np.float64)
     dims = [dout for _, dout in spec.dims()]
-    syncs = (3 if spec.model == "gat" else 1) * 2  # per layer, fwd+bwd
+    aggs_per_layer = 3 if spec.model == "gat" else 1
+    syncs = aggs_per_layer * 2  # per layer, fwd+bwd
     rows = send_rows + recv_rows
     comm_bytes = np.zeros(k)
-    for d in dims:
+    wire_bytes = np.zeros(k)
+    for li, d in enumerate(dims):
         comm_bytes += rows * d * 4 * syncs
-    comm = comm_bytes / cluster.net_bw + cluster.net_latency * 2 * len(dims) * syncs
+        wire_bytes += rows * d * _wire_elem(codec, li * aggs_per_layer) * syncs
+    comm = wire_bytes / cluster.net_bw + cluster.net_latency * 2 * len(dims) * syncs
 
     # memory: features + per-layer activations (kept for backward) + graph
     f, h, L = spec.feature_dim, spec.hidden_dim, spec.num_layers
@@ -228,6 +256,7 @@ def fullbatch_epoch(
         comm_bytes=comm_bytes,
         memory=memory,
         oom=bool((memory > cluster.memory).any()),
+        wire_bytes=wire_bytes,
     )
 
 
@@ -241,6 +270,9 @@ class MiniBatchEstimate:
     straggler: int            # argmax worker
     memory: np.ndarray        # [k]
     allreduce_time: float = 0.0  # gradient all-reduce (shared by both modes)
+    # [k] encoded feature-fetch bytes on the wire under the pricing codec;
+    # == fetch_bytes for lossless/fp32 codecs.
+    wire_bytes: Optional[np.ndarray] = None
 
 
 def minibatch_step(
@@ -254,6 +286,7 @@ def minibatch_step(
     *,
     remote_miss_vertices: Optional[np.ndarray] = None,
     cached_vertices: Optional[np.ndarray] = None,
+    codec=None,
 ) -> MiniBatchEstimate:
     """DistDGL step estimate from real per-worker sampled-batch metrics.
 
@@ -279,7 +312,8 @@ def minibatch_step(
     sample = (edges / cluster.sample_rate + remote * cluster.remote_adj_cost
               + cluster.sample_hop_overhead * spec.num_layers)
     fetch_bytes = miss * spec.feature_dim * 4
-    fetch = fetch_bytes / cluster.net_bw + cluster.net_latency
+    wire_bytes = miss * spec.feature_dim * _wire_elem(codec)
+    fetch = wire_bytes / cluster.net_bw + cluster.net_latency
 
     # dense flops: each sampled edge moves a d-dim message once per layer;
     # each block vertex gets the per-vertex NN update.
@@ -291,7 +325,8 @@ def minibatch_step(
     straggler = int(np.argmax(per_worker))
 
     n_params = sum(din * dout for din, dout in spec.dims()) * 2
-    allreduce = 2 * n_params * 4 / cluster.net_bw + cluster.net_latency
+    allreduce = (2 * n_params * _wire_elem(codec) / cluster.net_bw
+                 + cluster.net_latency)
 
     f = spec.feature_dim
     memory = (
@@ -310,6 +345,7 @@ def minibatch_step(
         straggler=straggler,
         memory=memory,
         allreduce_time=float(allreduce),
+        wire_bytes=wire_bytes,
     )
 
 
@@ -340,7 +376,8 @@ class ServeEstimate:
     sample_time: float
     fetch_time: float
     compute_time: float
-    fetch_bytes: int      # embedding-store MISS bytes crossing the network
+    fetch_bytes: int      # embedding-store MISS bytes, logical (f32) size
+    wire_bytes: int = 0   # encoded MISS bytes; == fetch_bytes under fp32
 
 
 def serve_request(
@@ -353,6 +390,7 @@ def serve_request(
     embed_dim: int,
     hops: int,
     cluster: ClusterSpec = PAPER_CLUSTER,
+    codec=None,
 ) -> ServeEstimate:
     """Price one serving micro-batch from its measured MFG + store metrics.
 
@@ -373,7 +411,8 @@ def serve_request(
               + float(num_remote) * cluster.remote_adj_cost
               + cluster.sample_hop_overhead * hops)
     fetch_bytes = int(num_miss) * embed_dim * 4
-    fetch = fetch_bytes / cluster.net_bw + cluster.net_latency
+    wire_bytes = int(round(int(num_miss) * embed_dim * _wire_elem(codec)))
+    fetch = wire_bytes / cluster.net_bw + cluster.net_latency
 
     # forward-only dense flops over the recomputed layer suffix
     dims = spec.dims()[spec.num_layers - hops:]
@@ -388,4 +427,5 @@ def serve_request(
         fetch_time=fetch,
         compute_time=compute,
         fetch_bytes=fetch_bytes,
+        wire_bytes=wire_bytes,
     )

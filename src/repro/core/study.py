@@ -183,11 +183,16 @@ def fullbatch_result_row(
     partition_time: float,
     est,
     sync_mode: str = "halo",
+    codec: str = "fp32",
 ) -> dict:
-    """Serialize one DistGNN result (shared by the study grid and the CLI)."""
+    """Serialize one DistGNN result (shared by the study grid and the CLI).
+
+    `comm_bytes` is the logical (f32) replica-sync volume; `wire_bytes` is
+    what actually crosses the network under `codec` (equal under fp32)."""
+    wire = est.comm_bytes if getattr(est, "wire_bytes", None) is None else est.wire_bytes
     return {
         "graph": graph_key, "method": method, "k": k,
-        "sync_mode": sync_mode,
+        "sync_mode": sync_mode, "codec": codec,
         "model": spec.model, "feature": spec.feature_dim,
         "hidden": spec.hidden_dim, "layers": spec.num_layers,
         "rf": metrics.replication_factor,
@@ -196,6 +201,7 @@ def fullbatch_result_row(
         "partition_time": partition_time,
         "epoch_time": est.epoch_time,
         "comm_bytes": float(est.comm_bytes.sum()),
+        "wire_bytes": float(wire.sum()),
         "memory_total": float(est.memory.sum()),
         "memory_max": float(est.memory.max()),
         "memory_balance": float(est.memory.max() / est.memory.mean()),
@@ -214,10 +220,15 @@ def fullbatch_row(
     cluster: ClusterSpec = PAPER_CLUSTER,
     cache: Optional[StudyCache] = None,
     sync_mode: str = "halo",
+    codec=None,
 ) -> dict:
     """One DistGNN study row. sync_mode="ring" prices the 1.5D regime: the
     blockrow layout replaces the edge partitioner (which is then only a
-    label) and the estimate runs through the overlap-aware ring model."""
+    label) and the estimate runs through the overlap-aware ring model.
+    `codec` (a name or `repro.core.wire.Codec`) prices the replica-sync
+    traffic at its wire width; the row keeps both byte columns."""
+    from repro.core.wire import as_codec
+
     cache = cache or _GLOBAL_CACHE
     g = cache.graph(graph_key, scale, 0)
     if sync_mode == "ring":
@@ -225,10 +236,11 @@ def fullbatch_row(
         method = rec.method
     else:
         rec = cache.edge_partition(g, method, k, seed)
-    est = cost_model.fullbatch_epoch(rec.book, spec, cluster)
+    est = cost_model.fullbatch_epoch(rec.book, spec, cluster, codec=codec)
     return fullbatch_result_row(
         graph_key, method, k, spec, metrics=rec.metrics,
         partition_time=rec.partition_time, est=est, sync_mode=sync_mode,
+        codec=as_codec(codec).name,
     )
 
 
@@ -280,6 +292,7 @@ def minibatch_row(
     cache_budget: int = 0,
     overlap: bool = False,
     prefetch_depth: int = 2,
+    codec=None,
 ) -> dict:
     """One DistDGL study row: REAL sampling on the real partition, cost-model
     cluster times. `run_device_step=True` additionally runs the jitted
@@ -287,7 +300,11 @@ def minibatch_row(
     `overlap`/`prefetch_depth` select the pipelined execution engine
     (gnn/pipeline.py) and the row carries its measured host phase times.
     `cache_policy`/`cache_budget` configure the per-worker feature cache
-    (gnn/feature_store.py); network fetch is then priced from cache misses."""
+    (gnn/feature_store.py); network fetch is then priced from cache misses.
+    `codec` compresses miss rows + gradient all-reduce on the wire: the
+    device step (if run) trains through it, and the cost model prices fetch
+    and all-reduce at its wire width."""
+    from repro.core.wire import as_codec
     from repro.gnn.feature_store import FeatureStore
 
     cache = cache or _GLOBAL_CACHE
@@ -304,7 +321,7 @@ def minibatch_row(
             g, rec.assignment, k, spec, feats, labels, train_mask,
             global_batch=global_batch, seed=seed,
             cache_policy=cache_policy, cache_budget=cache_budget,
-            overlap=overlap, prefetch_depth=prefetch_depth,
+            overlap=overlap, prefetch_depth=prefetch_depth, codec=codec,
         )
         store = tr.store
         ms = [tr.train_step() for _ in range(steps)]
@@ -321,7 +338,7 @@ def minibatch_row(
 
         store = FeatureStore.build(
             g, rec.book, policy=cache_policy, budget=cache_budget,
-            feature_dim=spec.feature_dim, seed=seed,
+            feature_dim=spec.feature_dim, seed=seed, codec=codec,
         )
         fanouts = PAPER_FANOUTS[spec.num_layers]
         spw = max(global_batch // k, 1)
@@ -358,6 +375,7 @@ def minibatch_row(
         inputs, remote, edges, owned, spec, cluster,
         seeds_per_worker=max(global_batch // k, 1),
         remote_miss_vertices=misses, cached_vertices=store.cache_sizes,
+        codec=codec,
     )
     steps_per_epoch = max(int(train_mask.sum()) // global_batch, 1)
     return minibatch_result_row(
@@ -366,6 +384,7 @@ def minibatch_row(
         inputs=inputs, remote=remote, hits=hits, misses=misses,
         est=est, steps_per_epoch=steps_per_epoch,
         cache_policy=cache_policy, cache_budget=cache_budget,
+        codec=as_codec(codec).name,
         # the overlap column means "the pipelined engine actually ran" —
         # the sampling-only fast path executes nothing, so it stays serial
         overlap=overlap and run_device_step, prefetch_depth=prefetch_depth,
@@ -407,15 +426,20 @@ def minibatch_result_row(
     overlap: bool = False,
     prefetch_depth: int = 0,
     host_times: Optional[dict] = None,
+    codec: str = "fp32",
 ) -> dict:
     """Serialize one DistDGL result (shared by the study grid and the CLI).
 
     `step_time` models the serial phase structure, `step_time_overlap` the
     pipelined one (cost_model.overlapped_step_time); `host_times` — from
     `host_phase_means` when a device step actually ran — adds this
-    container's measured wall times next to the modeled cluster times."""
+    container's measured wall times next to the modeled cluster times.
+    `fetch_bytes` is the logical (f32) miss volume, `wire_bytes` the
+    encoded volume under `codec` (equal under fp32)."""
+    wire = est.fetch_bytes if getattr(est, "wire_bytes", None) is None else est.wire_bytes
     row = {
         "graph": graph_key, "method": method, "k": k,
+        "codec": codec,
         "model": spec.model, "feature": spec.feature_dim,
         "hidden": spec.hidden_dim, "layers": spec.num_layers,
         "batch": batch,
@@ -432,6 +456,7 @@ def minibatch_result_row(
         "remote_misses": float(misses.sum()),
         "hit_rate": float(hits.sum() / remote.sum()) if remote.sum() else 1.0,
         "fetch_bytes": float(est.fetch_bytes.sum()),
+        "wire_bytes": float(np.asarray(wire).sum()),
         "step_time": est.step_time,
         "step_time_overlap": cost_model.overlapped_step_time(est),
         "epoch_time": est.step_time * steps_per_epoch,
@@ -474,15 +499,18 @@ def serve_result_row(
     cache_budget: int = 0,
     partition_time: float = 0.0,
     partition_quality: Optional[float] = None,
+    codec: str = "fp32",
 ) -> dict:
     """Serialize one serving run (shared by `launch/gnn_serve.py --out-json`
     and `benchmarks/fig_serving.py`). `report` is a
     `repro.serve.ServingReport`; `partition_quality` is the regime's scalar
     (edge-cut for vertex partitions, replication factor for edge
-    partitions)."""
+    partitions). `miss_bytes` is the logical (f32) miss volume; `wire_bytes`
+    is the encoded volume measured by the embedding store under `codec`."""
     fetch = report.fetch
     return {
         "graph": graph_key, "method": method, "k": k,
+        "codec": codec,
         "model": spec.model, "feature": spec.feature_dim,
         "hidden": spec.hidden_dim, "layers": spec.num_layers,
         "regime": "serve",
@@ -507,6 +535,7 @@ def serve_result_row(
         "remote_misses": fetch.num_remote_miss,
         "hit_rate": fetch.hit_rate,
         "miss_bytes": fetch.miss_bytes,
+        "wire_bytes": fetch.wire_bytes,
     }
 
 
@@ -528,9 +557,13 @@ def serve_row(
     cache_budget: int = 0,
     cluster: ClusterSpec = PAPER_CLUSTER,
     cache: Optional[StudyCache] = None,
+    codec=None,
 ) -> dict:
     """One serving study row: REAL layer-wise inference + request simulation
-    on the real partition, cost-model cluster latencies.
+    on the real partition, cost-model cluster latencies. `codec` installs a
+    wire codec on the embedding store: miss rows are decoded from their
+    encoded form (lossy codecs perturb served embeddings) and the service
+    time is priced from encoded bytes.
 
     `method` may be a vertex partitioner (the embedding store shards by it
     directly) or an edge partitioner (the store shards by the edge book's
@@ -539,6 +572,7 @@ def serve_row(
     partitions are reused across the training grid.
     """
     from repro.core.partition_book import build_vertex_book
+    from repro.core.wire import as_codec
     from repro.gnn.inference import (
         LayerwiseInference,
         edge_assignment_from_vertex,
@@ -582,6 +616,7 @@ def serve_row(
         g, vbook, spec, params, embeddings,
         hops=hops, fanout=fanout, max_batch=max_batch, max_wait=max_wait,
         cache_policy=cache_policy, cache_budget=cache_budget, seed=seed,
+        codec=codec,
     )
     rng = np.random.default_rng(seed + 99)
     request_ids = rng.integers(0, g.num_vertices, n_requests)
@@ -593,7 +628,7 @@ def serve_row(
         qps=qps, hops=hops, fanout=fanout, max_batch=max_batch,
         max_wait=max_wait, cache_policy=cache_policy,
         cache_budget=cache_budget, partition_time=rec.partition_time,
-        partition_quality=quality,
+        partition_quality=quality, codec=as_codec(codec).name,
     )
 
 

@@ -1,0 +1,318 @@
+"""The wire layer: pluggable codecs for every byte-moving path.
+
+The paper's mechanism is that partitioning quality governs how many bytes
+cross the network; this module is the complementary lever the follow-up
+literature (SAR, the DistGNN-compression line) pulls on the SAME bytes:
+compress the payload instead of (or on top of) partitioning it better.
+Every communication path in the repo routes its payload through one
+`Codec`:
+
+  gnn/sync.py          halo all_to_all buffers + ring ppermute blocks
+                       (encode BEFORE the collective, decode after — the
+                       compiled HLO moves the compressed dtype, pinned in
+                       tests/test_dist_lowering.py)
+  gnn/feature_store.py remote-miss rows (the DistDGL fetch phase)
+  gnn/fullbatch.py +   gradient all-reduce via the error-feedback pmean
+  gnn/minibatch.py     (`codec_grad_reduce`, composing optim/compress.py)
+  core/cost_model.py   analytic `wire_bytes` next to every logical bytes
+                       term
+
+A codec is three functions:
+
+  encode(x)                -> (payload, meta)   payload is what crosses the
+                                                wire; meta (scale) rides
+                                                along or is None
+  decode(payload, meta)    -> x'                f32 reconstruction
+  wire_bytes(shape, dtype) -> int               bytes on the wire for one
+                                                encoded tensor, payload +
+                                                meta (== payload.nbytes +
+                                                meta.nbytes, property-
+                                                tested in tests/test_wire.py)
+
+`Fp32Codec` is the default and is the IDENTITY — encode/decode return their
+input untouched, so every default path is bitwise-identical to the
+pre-codec code (no astype, no extra ops in the jaxpr). Encode/decode accept
+numpy arrays (the host-side feature store path) and jax arrays/tracers (the
+device collectives) alike.
+
+Error feedback: lossy gradient reduction carries the quantisation residual
+to the next step (Seide et al. / Karimireddy et al.) so compression error
+acts like a delayed gradient instead of a bias. `codec_grad_reduce` is the
+trainer-facing wrapper: lossless codecs take the plain pmean; int8 routes
+through `optim/compress.py`'s quantiser (the same compress/decompress pair
+`compressed_psum` composes); other lossy codecs run the identical
+EF recipe with their own encode/decode. The EF state is an explicit carry
+(same tree as the grads), jit-stable, donated alongside opt_state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CODECS",
+    "Bf16Codec",
+    "Codec",
+    "Fp32Codec",
+    "Int8EFCodec",
+    "VariableRatioCodec",
+    "as_codec",
+    "codec_grad_reduce",
+    "ef_init",
+    "make_codec",
+    "roundtrip",
+]
+
+CODECS = ("fp32", "bf16", "int8", "variable")
+
+
+def _xp(x):
+    """numpy for host arrays, jnp for device arrays/tracers."""
+    return np if isinstance(x, np.ndarray) else jnp
+
+
+def _nelems(shape) -> int:
+    return int(math.prod(int(s) for s in shape))
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """What every wire codec implements (see module docstring)."""
+
+    name: str
+    lossless: bool
+
+    def encode(self, x, *, layer: int = 0): ...
+
+    def decode(self, payload, meta): ...
+
+    def wire_bytes(self, shape, dtype=np.float32) -> int: ...
+
+    def ratio(self, layer: int = 0) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp32Codec:
+    """Identity codec: the wire carries the raw f32 payload (today's bytes).
+
+    encode/decode return their argument UNCHANGED (same object, no astype),
+    which is what makes `codec="fp32"` bitwise-identical to the pre-wire
+    code paths — the refactor is behaviour-preserving by default.
+    """
+
+    name = "fp32"
+    lossless = True
+
+    def encode(self, x, *, layer: int = 0):
+        return x, None
+
+    def decode(self, payload, meta):
+        return payload
+
+    def wire_bytes(self, shape, dtype=np.float32) -> int:
+        n = _nelems(shape)
+        return n * np.dtype(dtype).itemsize if n else 0
+
+    def ratio(self, layer: int = 0) -> float:
+        return 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec:
+    """Round-to-bfloat16 payload: 2 bytes/element, ~3 significand bits lost.
+
+    No meta crosses the wire; relative roundtrip error is bounded by
+    2^-8 (half a ulp of the 8-bit bf16 significand).
+    """
+
+    name = "bf16"
+    lossless = False
+
+    def encode(self, x, *, layer: int = 0):
+        return x.astype(jnp.bfloat16), None
+
+    def decode(self, payload, meta):
+        return payload.astype(jnp.float32)
+
+    def wire_bytes(self, shape, dtype=np.float32) -> int:
+        n = _nelems(shape)
+        return n * 2 if n else 0
+
+    def ratio(self, layer: int = 0) -> float:
+        return 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8EFCodec:
+    """Per-tensor int8 uniform quantisation (optim/compress.py's scheme).
+
+    scale = max|x| / 127 rides along as one f32 meta scalar per encoded
+    tensor — both the int8 payload and the scale cross the wire, which is
+    exactly what the ring-HLO byte pin measures. The "EF" in the name is
+    the gradient-reduce contract: `codec_grad_reduce` threads this codec
+    through the error-feedback accumulator so quantisation error never
+    biases convergence; activation exchanges (halo/ring) re-encode fresh
+    payloads each sync and need no carried state.
+    """
+
+    name = "int8"
+    lossless = False
+    meta_bytes = 4  # one f32 scale per encoded tensor
+
+    def encode(self, x, *, layer: int = 0):
+        xp = _xp(x)
+        if x.size == 0:
+            return x.astype(xp.int8), xp.float32(1.0)
+        x = x.astype(xp.float32)
+        scale = xp.maximum(xp.max(xp.abs(x)), 1e-12) / 127.0
+        q = xp.clip(xp.round(x / scale), -127, 127).astype(xp.int8)
+        return q, scale
+
+    def decode(self, payload, meta):
+        xp = _xp(payload)
+        return payload.astype(xp.float32) * meta
+
+    def wire_bytes(self, shape, dtype=np.float32) -> int:
+        n = _nelems(shape)
+        return n + self.meta_bytes if n else 0
+
+    def ratio(self, layer: int = 0) -> float:
+        return 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class VariableRatioCodec:
+    """Ratio ramps with depth and training progress (SAR's
+    `--enable_cr --compression_type variable` policy).
+
+    The first aggregate of a forward pass carries the widest payload (the
+    feature-width block) and tolerates compression best, so it quantises
+    hardest; deeper aggregates — closer to the loss — get progressively
+    more precision. Early epochs (`epoch < warmup_epochs`) soften the whole
+    schedule one notch, protecting the noisy initial steps:
+
+        layer 0:   int8  (bf16 during warmup)
+        layer >=1: bf16  (fp32 during warmup)
+
+    `layer` is the aggregate ordinal within one forward pass (sync
+    strategies count their aggregates; GAT's three layer-0 syncs are
+    ordinals 0..2). Swapping `epoch` builds a NEW codec — the step function
+    re-traces, so ramp at epoch granularity, not per step.
+    """
+
+    name = "variable"
+    lossless = False
+    epoch: int = 0
+    warmup_epochs: int = 2
+
+    def _sub(self, layer: int):
+        hard = self.epoch >= self.warmup_epochs
+        if layer == 0:
+            return _INT8 if hard else _BF16
+        return _BF16 if hard else _FP32
+
+    def at_epoch(self, epoch: int) -> "VariableRatioCodec":
+        return dataclasses.replace(self, epoch=int(epoch))
+
+    def encode(self, x, *, layer: int = 0):
+        return self._sub(layer).encode(x)
+
+    def decode(self, payload, meta):
+        # dispatch on the payload dtype — each sub-codec is recognisable
+        if payload.dtype == jnp.int8:
+            return _INT8.decode(payload, meta)
+        if payload.dtype == jnp.bfloat16:
+            return _BF16.decode(payload, meta)
+        return _FP32.decode(payload, meta)
+
+    def wire_bytes(self, shape, dtype=np.float32, *, layer: int = 0) -> int:
+        return self._sub(layer).wire_bytes(shape, dtype)
+
+    def ratio(self, layer: int = 0) -> float:
+        return self._sub(layer).ratio()
+
+
+_FP32 = Fp32Codec()
+_BF16 = Bf16Codec()
+_INT8 = Int8EFCodec()
+_REGISTRY = {"fp32": _FP32, "bf16": _BF16, "int8": _INT8,
+             "variable": VariableRatioCodec()}
+
+
+def make_codec(name: str) -> Codec:
+    """Codec instance by CLI name (`--codec {fp32,bf16,int8,variable}`)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}: options are {', '.join(CODECS)}")
+
+
+def as_codec(codec: "Optional[str | Codec]") -> Codec:
+    """Normalise None / a name / an instance to a Codec (None -> fp32)."""
+    if codec is None:
+        return _FP32
+    if isinstance(codec, str):
+        return make_codec(codec)
+    return codec
+
+
+def roundtrip(codec: Codec, x, *, layer: int = 0):
+    """decode(encode(x)) — the locally-observable effect of the wire."""
+    payload, meta = codec.encode(x, layer=layer)
+    return codec.decode(payload, meta)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback gradient reduction (the trainers' allreduce path)
+# ---------------------------------------------------------------------------
+
+
+def ef_init(grads_like) -> Any:
+    """Zero error-feedback accumulator, same tree/shapes as the grads."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def codec_grad_reduce(codec: Codec, grads, ef, axis: Optional[str]):
+    """Data-parallel gradient mean through the codec, with error feedback.
+
+    Returns (mean_grads, new_ef). Lossless codecs take the plain pmean and
+    the EF state passes through untouched (zero forever). Lossy codecs run
+    the compressed_psum recipe — quantise (corrected = g + e), reduce the
+    dequantised views, keep the residual local — with int8 literally routed
+    through `optim/compress.py`'s compress/decompress pair so the trainer
+    allreduce and the cross-pod `compressed_psum` cannot drift apart.
+    `axis=None` (k == 1) skips the collective; the quantisation + EF still
+    applies, so the k=1 oracle sees the same arithmetic as each worker.
+    """
+    def pmean(g):
+        return jax.lax.pmean(g, axis) if axis is not None else g
+
+    if codec.lossless:
+        return jax.tree.map(pmean, grads), ef
+
+    if codec.name == "int8":
+        from repro.optim.compress import CompressionState, compress, decompress
+
+        qs, scales, new_state = compress(grads, CompressionState(error=ef))
+        deq = decompress(qs, scales)
+        return jax.tree.map(pmean, deq), new_state.error
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        deq = roundtrip(codec, corrected)
+        return deq, corrected - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = treedef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat, eflat)]
+    mean = treedef.unflatten([pmean(d) for d, _ in pairs])
+    new_ef = treedef.unflatten([r for _, r in pairs])
+    return mean, new_ef

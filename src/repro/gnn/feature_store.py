@@ -32,6 +32,11 @@ remote-miss} with one vectorised pass and returns the assembled row block
 plus a `FetchStats` record (counts and bytes per class). Only *miss* bytes
 cross the network — `core/cost_model.py` prices the feature-loading phase
 (`minibatch_step`) and the serving fetch phase (`serve_request`) from them.
+A store built with a lossy wire codec (`repro/core/wire.py`) serves miss
+rows from their codec-encoded remote representation — `gather` roundtrips
+the miss block through encode/decode (local and cache rows never cross the
+network and stay exact) — and `FetchStats.wire_bytes` reports the encoded
+miss bytes next to the logical `miss_bytes` (equal under fp32).
 Note the asymmetry with sampling: caching rows does NOT cache adjacency, so
 remote-adjacency sampling costs still scale with all remote vertices.
 
@@ -49,6 +54,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
+from repro.core.wire import Codec, as_codec
 
 __all__ = [
     "CACHE_POLICIES",
@@ -62,7 +68,13 @@ CACHE_POLICIES = ("none", "random", "degree", "halo")
 
 
 class FetchStats(NamedTuple):
-    """Per-lookup feature-loading accounting (one worker, one batch)."""
+    """Per-lookup feature-loading accounting (one worker, one batch).
+
+    `miss_bytes` is the logical (f32) volume of rows that crossed the
+    network; `wire_bytes` is what the store's codec actually shipped for
+    them (== miss_bytes under fp32). The field defaults to 0 so positional
+    seven-field construction keeps working.
+    """
 
     num_input: int
     num_local: int
@@ -71,6 +83,7 @@ class FetchStats(NamedTuple):
     local_bytes: int
     hit_bytes: int
     miss_bytes: int
+    wire_bytes: int = 0
 
     @property
     def num_remote(self) -> int:
@@ -83,7 +96,10 @@ class FetchStats(NamedTuple):
 
     @classmethod
     def merge(cls, stats: "list[FetchStats]") -> "FetchStats":
-        return cls(*(int(sum(s[i] for s in stats)) for i in range(7)))
+        """Field-wise sum; an empty list is the zero record (the serving
+        engine legitimately sees zero-request micro-batch windows)."""
+        return cls(*(int(sum(s[i] for s in stats))
+                     for i in range(len(cls._fields))))
 
 
 def select_cache_vertices(
@@ -172,6 +188,8 @@ class RowStore:
     cache_sizes: np.ndarray         # int64 [k]: true cache entries per worker
     cache_rows: Optional[np.ndarray]  # [k, max_cache, d] cached copies
     rows: Optional[np.ndarray]        # global [V, d] (None = accounting-only)
+    # wire codec for remote-miss rows (None -> fp32 == exact, today's bytes)
+    codec: Optional[Codec] = None
 
     @classmethod
     def create(
@@ -183,6 +201,7 @@ class RowStore:
         row_dim: Optional[int] = None,
         policy: str = "none",
         budget: int = 0,
+        codec=None,
     ) -> "RowStore":
         """Build a store whose worker-w cache holds `cache_vertices[w]`.
 
@@ -212,7 +231,7 @@ class RowStore:
             book=book, policy=policy, budget=int(budget),
             row_dim=row_dim, bytes_per_row=4 * row_dim,
             cache_ids=cache_ids, cache_sizes=sizes, cache_rows=crows,
-            rows=rows,
+            rows=rows, codec=as_codec(codec),
         )
 
     @classmethod
@@ -226,12 +245,13 @@ class RowStore:
         rows: Optional[np.ndarray] = None,
         row_dim: Optional[int] = None,
         seed: int = 0,
+        codec=None,
     ) -> "RowStore":
         """Select the per-worker caches with `select_cache_vertices`, then
         `create` (which subclasses do NOT override, unlike `build`)."""
         ids = select_cache_vertices(graph, book, policy, budget, seed=seed)
         return cls.create(book, ids, rows=rows, row_dim=row_dim,
-                          policy=policy, budget=budget)
+                          policy=policy, budget=budget, codec=codec)
 
     def cached_ids(self, worker: int) -> np.ndarray:
         """Global ids cached at `worker` (sorted, cache-row order)."""
@@ -250,6 +270,9 @@ class RowStore:
         miss = ~local & ~hit
         return local, hit, miss
 
+    def _codec(self) -> Codec:
+        return as_codec(self.codec)
+
     def _stats_of(self, ids: np.ndarray, local, hit, miss) -> FetchStats:
         nl, nh, nm = int(local.sum()), int(hit.sum()), int(miss.sum())
         b = self.bytes_per_row
@@ -257,6 +280,7 @@ class RowStore:
             num_input=int(ids.shape[0]),
             num_local=nl, num_cache_hit=nh, num_remote_miss=nm,
             local_bytes=nl * b, hit_bytes=nh * b, miss_bytes=nm * b,
+            wire_bytes=self._codec().wire_bytes((nm, self.row_dim)),
         )
 
     def stats(self, worker: int, ids: np.ndarray) -> FetchStats:
@@ -277,7 +301,15 @@ class RowStore:
         out[local] = self.rows[ids[local]]                          # owner shard
         slot = np.searchsorted(self.cached_ids(worker), ids[hit])
         out[hit] = self.cache_rows[worker, slot]
-        out[miss] = self.rows[ids[miss]]                            # remote fetch
+        codec = self._codec()
+        miss_rows = self.rows[ids[miss]]                            # remote fetch
+        if not codec.lossless and miss_rows.shape[0]:
+            # the remote side ships the encoded representation; only the
+            # decoded rows exist on this worker
+            payload, meta = codec.encode(miss_rows)
+            miss_rows = np.asarray(codec.decode(payload, meta),
+                                   dtype=self.rows.dtype)
+        out[miss] = miss_rows
         return out, self._stats_of(ids, local, hit, miss)
 
 
@@ -300,13 +332,14 @@ class FeatureStore(RowStore):
         features: Optional[np.ndarray] = None,
         feature_dim: Optional[int] = None,
         seed: int = 0,
+        codec=None,
     ) -> "FeatureStore":
         """Build the store. With `features=None` the store is accounting-only
         (split/stats work, gather does not) — `feature_dim` then sizes the
         byte metrics."""
         return cls.from_policy(
             graph, book, policy=policy, budget=budget,
-            rows=features, row_dim=feature_dim, seed=seed,
+            rows=features, row_dim=feature_dim, seed=seed, codec=codec,
         )
 
     @property

@@ -47,6 +47,7 @@ from repro.core.partition_book import (
     build_blockrow_book,
     build_edge_book,
 )
+from repro.core.wire import as_codec, codec_grad_reduce
 from repro.gnn import models
 from repro.gnn.models import GNNSpec
 from repro.gnn.sync import (
@@ -54,6 +55,7 @@ from repro.gnn.sync import (
     build_ring_blocks,
     make_sync,
     sync_bytes_per_round,
+    sync_wire_bytes_per_round,
 )
 from repro.optim import adam_init, adam_update
 
@@ -113,16 +115,17 @@ def resolve_sync_mode(sync_mode: str, k: int) -> str:
     return sync_mode
 
 
-def make_step_fns(spec: GNNSpec, sync_mode: str, num_vertices: int, k: int):
+def make_step_fns(spec: GNNSpec, sync_mode: str, num_vertices: int, k: int,
+                  codec=None):
     """(loss_fn, forward_fn), each `(params, blk) -> ...` on ONE device."""
     mode = resolve_sync_mode(sync_mode, k)
 
     def loss(params, blk):
-        sync = make_sync(mode, blk, num_vertices, AXIS)
+        sync = make_sync(mode, blk, num_vertices, AXIS, codec=codec)
         return models.loss_fn(spec, params, blk.x, blk, sync)
 
     def forward(params, blk):
-        sync = make_sync(mode, blk, num_vertices, AXIS)
+        sync = make_sync(mode, blk, num_vertices, AXIS, codec=codec)
         return models.forward(spec, params, blk.x, blk, sync)
 
     return loss, forward
@@ -134,43 +137,37 @@ def make_step_fns(spec: GNNSpec, sync_mode: str, num_vertices: int, k: int):
 
 
 def wrap_spmd(fn, k: int, mode: str,
-              mesh: Optional[jax.sharding.Mesh] = None):
-    """Run a (params, stacked_blocks) function in the chosen mode."""
+              mesh: Optional[jax.sharding.Mesh] = None, n_mapped: int = 1):
+    """Run a (params, *mapped) function in the chosen mode.
+
+    The first argument is replicated (params); the next `n_mapped` arguments
+    are stacked [k, ...] per-device trees (blocks, and for the lossy-codec
+    train step the per-device error-feedback state as a second carry)."""
     if k == 1:
-        return lambda params, blocks: fn(
-            params, jax.tree.map(lambda a: a[0], blocks)
+        return lambda params, *mapped: fn(
+            params, *(jax.tree.map(lambda a: a[0], m) for m in mapped)
         )
     if mode == "sim":
-        return jax.vmap(fn, in_axes=(None, 0), axis_name=AXIS)
+        return jax.vmap(fn, in_axes=(None,) + (0,) * n_mapped,
+                        axis_name=AXIS)
     assert mesh is not None, "shard_map mode needs a mesh"
     P = jax.sharding.PartitionSpec
 
-    def per_device(params, blocks_local):
+    def per_device(params, *mapped_local):
         # shard_map keeps the sharded leading dim as size 1 (vmap strips
         # it) — squeeze in, unsqueeze out
-        blk = jax.tree.map(lambda a: a[0], blocks_local)
-        out = fn(params, blk)
+        args = (jax.tree.map(lambda a: a[0], m) for m in mapped_local)
+        out = fn(params, *args)
         return jax.tree.map(lambda a: a[None], out)
 
+    specs = dict(in_specs=(P(),) + (P(AXIS),) * n_mapped, out_specs=P(AXIS))
     # jax >= 0.6 exposes jax.shard_map (check_vma); 0.4.x has the
     # experimental module (check_rep). Same semantics either way.
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            per_device,
-            mesh=mesh,
-            in_specs=(P(), P(AXIS)),
-            out_specs=P(AXIS),
-            check_vma=False,
-        )
+        return jax.shard_map(per_device, mesh=mesh, check_vma=False, **specs)
     from jax.experimental.shard_map import shard_map
 
-    return shard_map(
-        per_device,
-        mesh=mesh,
-        in_specs=(P(), P(AXIS)),
-        out_specs=P(AXIS),
-        check_rep=False,
-    )
+    return shard_map(per_device, mesh=mesh, check_rep=False, **specs)
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +186,8 @@ class FullBatchTrainer:
     params: Any = None
     opt_state: Any = None
     lr: float = 1e-2
+    codec: Any = None                  # wire codec name/instance (None=fp32)
+    ef_state: Any = None               # error-feedback carry (lossy codecs)
 
     # ---------------------------------------------------------------- setup
     @classmethod
@@ -207,6 +206,7 @@ class FullBatchTrainer:
         mesh: Optional[jax.sharding.Mesh] = None,
         seed: int = 0,
         lr: float = 1e-2,
+        codec=None,
     ) -> "FullBatchTrainer":
         book = build_book(
             graph, edge_assignment, k, sync_mode=sync_mode,
@@ -217,35 +217,77 @@ class FullBatchTrainer:
         return cls(
             spec=spec, book=book, blocks=blocks, sync_mode=sync_mode,
             mode=mode, mesh=mesh, params=params, opt_state=adam_init(params),
-            lr=lr,
+            lr=lr, codec=codec,
         )
 
     # ------------------------------------------------------------- plumbing
     @functools.cached_property
     def _step_fns(self):
         return make_step_fns(self.spec, self.sync_mode,
-                             self.book.num_vertices, self.book.k)
+                             self.book.num_vertices, self.book.k,
+                             codec=self.codec)
 
-    def _wrap(self, fn):
-        return wrap_spmd(fn, self.book.k, self.mode, self.mesh)
+    def _wrap(self, fn, n_mapped: int = 1):
+        return wrap_spmd(fn, self.book.k, self.mode, self.mesh,
+                         n_mapped=n_mapped)
+
+    def _init_ef(self):
+        """Per-device zero EF residuals, stacked [k, ...] like the blocks."""
+        base = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), self.params)
+        if self.book.k > 1:
+            base = jax.tree.map(
+                lambda z: jnp.zeros((self.book.k,) + z.shape, z.dtype), base)
+        return base
 
     # ----------------------------------------------------------------- api
     @functools.cached_property
     def _train_step(self):
         per_device_loss, _ = self._step_fns
+        codec = as_codec(self.codec)
 
-        def loss_of(params, blocks):
-            losses = self._wrap(per_device_loss)(params, blocks)
-            return jnp.mean(losses)
+        if codec.lossless:
+            # historical step graph, untouched: grads via the implicit vmap/
+            # shard_map backward of the mean loss (bitwise-identical default)
+            def loss_of(params, blocks):
+                losses = self._wrap(per_device_loss)(params, blocks)
+                return jnp.mean(losses)
 
-        def step(params, opt_state, blocks):
-            loss, grads = jax.value_and_grad(loss_of)(params, blocks)
+            def step(params, opt_state, blocks):
+                loss, grads = jax.value_and_grad(loss_of)(params, blocks)
+                new_params, new_state = adam_update(
+                    grads, opt_state, params, lr=self.lr
+                )
+                return loss, new_params, new_state
+
+            return jax.jit(step)
+
+        # lossy codec: per-device grads completed by the error-feedback
+        # compressed pmean (== the implicit backward's gradient for fp32;
+        # verified against it in tests/test_wire.py)
+        k = self.book.k
+        axis = AXIS if k > 1 else None
+
+        def per_device(params, blk, ef):
+            loss, grads = jax.value_and_grad(per_device_loss)(params, blk)
+            mean_grads, new_ef = codec_grad_reduce(codec, grads, ef, axis)
+            return loss, mean_grads, new_ef
+
+        wrapped = self._wrap(per_device, n_mapped=2)
+
+        def step(params, opt_state, blocks, ef):
+            losses, grads, new_ef = wrapped(params, blocks, ef)
+            if k > 1:
+                # pmean made the grads replica-consistent; lane 0 is the mean
+                losses = jnp.mean(losses)
+                grads = jax.tree.map(lambda g: g[0], grads)
             new_params, new_state = adam_update(
                 grads, opt_state, params, lr=self.lr
             )
-            return loss, new_params, new_state
+            return losses, new_params, new_state, new_ef
 
-        return jax.jit(step)
+        donate = () if jax.default_backend() == "cpu" else (1, 3)
+        return jax.jit(step, donate_argnums=donate)
 
     @functools.cached_property
     def _forward(self):
@@ -255,10 +297,34 @@ class FullBatchTrainer:
         )
 
     def train_step(self) -> float:
-        loss, self.params, self.opt_state = self._train_step(
-            self.params, self.opt_state, self.blocks
+        if as_codec(self.codec).lossless:
+            loss, self.params, self.opt_state = self._train_step(
+                self.params, self.opt_state, self.blocks
+            )
+            return float(loss)
+        if self.ef_state is None:
+            self.ef_state = self._init_ef()
+        loss, self.params, self.opt_state, self.ef_state = self._train_step(
+            self.params, self.opt_state, self.blocks, self.ef_state
         )
         return float(loss)
+
+    def set_epoch(self, epoch: int) -> None:
+        """Advance epoch-scheduled codecs (VariableRatioCodec). Re-jits the
+        step only when the schedule actually changes tier."""
+        codec = as_codec(self.codec)
+        advance = getattr(codec, "at_epoch", None)
+        if advance is None:
+            return
+        new = advance(epoch)
+        # a tier change shows up in the per-layer ratios; same ratios mean
+        # the same trace, so keep the compiled step
+        if (new.ratio(0), new.ratio(1)) != (codec.ratio(0), codec.ratio(1)):
+            self.codec = new
+            for cached in ("_step_fns", "_train_step", "_forward"):
+                self.__dict__.pop(cached, None)
+        else:
+            self.codec = new
 
     def forward_logits_global(self) -> np.ndarray:
         """Master-row logits gathered to a global [V, C] array (testing)."""
@@ -286,6 +352,25 @@ class FullBatchTrainer:
             int(np.prod(p.shape)) for p in jax.tree.leaves(self.params)
         )
         total += 2 * self.book.k * n_params * 4
+        return total
+
+    def wire_bytes_per_epoch(self) -> int:
+        """Codec-aware twin of `comm_bytes_per_epoch`: bytes that actually
+        cross the network once payloads are encoded (== the logical number
+        under the default fp32 codec)."""
+        codec = as_codec(self.codec)
+        syncs_per_layer = 3 if self.spec.model == "gat" else 1
+        total = 0
+        for li, (_, d_out) in enumerate(self.spec.dims()):
+            ordinal = li * syncs_per_layer
+            per = sync_wire_bytes_per_round(
+                self.book, d_out, self.sync_mode, codec, layer=ordinal)
+            total += syncs_per_layer * per * 2  # fwd + bwd
+        # gradient all-reduce, priced per leaf (per-tensor codec meta)
+        leaf_bytes = sum(
+            codec.wire_bytes(p.shape) for p in jax.tree.leaves(self.params)
+        )
+        total += 2 * self.book.k * leaf_bytes
         return total
 
     def memory_bytes_per_partition(self) -> np.ndarray:

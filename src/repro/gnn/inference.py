@@ -170,6 +170,7 @@ def build_embedding_stores(
     policy: str = "none",
     budget: int = 0,
     seed: int = 0,
+    codec=None,
 ) -> list:
     """Freeze per-layer embeddings into `RowStore`s sharded by `book`.
 
@@ -181,7 +182,7 @@ def build_embedding_stores(
     ids = select_cache_vertices(graph, book, policy, budget, seed=seed)
     return [
         RowStore.create(book, ids, rows=np.asarray(h, dtype=np.float32),
-                        policy=policy, budget=budget)
+                        policy=policy, budget=budget, codec=codec)
         for h in embeddings
     ]
 

@@ -74,6 +74,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook, build_vertex_book
+from repro.core.wire import as_codec, codec_grad_reduce
 from repro.gnn.feature_store import FeatureStore
 from repro.gnn.pipeline import BatchPreparer, PipelineEngine
 from repro.kernels import ops
@@ -211,7 +212,8 @@ class StepMetrics:
     # feature-store phase accounting: remote = cache_hits + remote_misses
     cache_hits: np.ndarray = None      # [k]
     remote_misses: np.ndarray = None   # [k]
-    miss_bytes: np.ndarray = None      # [k] feature bytes crossing the net
+    miss_bytes: np.ndarray = None      # [k] logical (f32) miss bytes
+    wire_bytes: np.ndarray = None      # [k] codec-encoded miss bytes
     # pipeline phase accounting (gnn/pipeline.py): host wall per phase, the
     # consumer-side step wall, and how much host time the prefetch hid
     fetch_time_host: float = 0.0       # feature gather + stack
@@ -271,6 +273,8 @@ class MiniBatchTrainer:
     store: Optional[FeatureStore] = None
     overlap: bool = False
     prefetch_depth: int = 2
+    codec: Any = None                  # wire codec name/instance (None=fp32)
+    ef_state: Any = None               # error-feedback carry (lossy codecs)
     _load_ema: Optional[np.ndarray] = None
     _seed_share: Optional[np.ndarray] = None
 
@@ -294,6 +298,7 @@ class MiniBatchTrainer:
         cache_budget: int = 0,
         overlap: bool = False,
         prefetch_depth: int = 2,
+        codec=None,
     ) -> "MiniBatchTrainer":
         from repro.optim import adam_init
 
@@ -307,7 +312,7 @@ class MiniBatchTrainer:
         features = features.astype(np.float32)
         store = FeatureStore.build(
             graph, book, policy=cache_policy, budget=cache_budget,
-            features=features, seed=seed,
+            features=features, seed=seed, codec=codec,
         )
         return cls(
             graph=graph, book=book, spec=spec,
@@ -316,7 +321,7 @@ class MiniBatchTrainer:
             global_batch=global_batch, params=params,
             opt_state=adam_init(params), seed=seed,
             lr=lr, rebalance=rebalance, store=store,
-            overlap=overlap, prefetch_depth=prefetch_depth,
+            overlap=overlap, prefetch_depth=prefetch_depth, codec=codec,
             _load_ema=np.ones(k), _seed_share=np.full(k, 1.0 / k),
         )
 
@@ -359,33 +364,85 @@ class MiniBatchTrainer:
         spec = self.spec
         lr = self.lr
         sizes = tuple(self._layer_sizes)
-
-        def loss_of(params, stacked):
-            losses = jax.vmap(
-                lambda batch: minibatch_loss(spec, params, batch, sizes),
-                axis_name=AXIS,
-            )(stacked)
-            return jnp.mean(losses)
-
-        def step(params, opt_state, stacked):
-            loss, grads = jax.value_and_grad(loss_of)(params, stacked)
-            new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
-            return loss, new_p, new_s
+        codec = as_codec(self.codec)
 
         # donate params/opt_state so the device step updates them in place —
         # the trainer never reads the old buffers again. CPU's jit cannot
         # donate (XLA:CPU aliasing is unsupported and warns per compile), so
         # the knob only engages on accelerator backends.
-        donate = () if jax.default_backend() == "cpu" else (0, 1)
-        return jax.jit(step, donate_argnums=donate)
+        on_cpu = jax.default_backend() == "cpu"
+
+        if codec.lossless:
+            # historical step graph, untouched (bitwise-identical default)
+            def loss_of(params, stacked):
+                losses = jax.vmap(
+                    lambda batch: minibatch_loss(spec, params, batch, sizes),
+                    axis_name=AXIS,
+                )(stacked)
+                return jnp.mean(losses)
+
+            def step(params, opt_state, stacked):
+                loss, grads = jax.value_and_grad(loss_of)(params, stacked)
+                new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
+                return loss, new_p, new_s
+
+            return jax.jit(step, donate_argnums=() if on_cpu else (0, 1))
+
+        # lossy codec: per-worker grads completed by the error-feedback
+        # compressed pmean; the EF residual rides along as a [k, ...] carry
+        def per_worker(params, batch, ef):
+            loss, grads = jax.value_and_grad(
+                lambda p: minibatch_loss(spec, p, batch, sizes))(params)
+            mean_grads, new_ef = codec_grad_reduce(codec, grads, ef, AXIS)
+            return loss, mean_grads, new_ef
+
+        def step(params, opt_state, stacked, ef):
+            losses, grads, new_ef = jax.vmap(
+                per_worker, in_axes=(None, 0, 0), axis_name=AXIS,
+            )(params, stacked, ef)
+            grads = jax.tree.map(lambda g: g[0], grads)  # replica-consistent
+            new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
+            return jnp.mean(losses), new_p, new_s, new_ef
+
+        return jax.jit(step, donate_argnums=() if on_cpu else (1, 3))
+
+    def _init_ef(self):
+        """Per-worker zero EF residuals, stacked [k, ...]."""
+        return jax.tree.map(
+            lambda p: jnp.zeros((self.book.k,) + p.shape, jnp.float32),
+            self.params)
+
+    def set_epoch(self, epoch: int) -> None:
+        """Advance epoch-scheduled codecs (VariableRatioCodec) on the
+        gradient all-reduce. The feature-store codec is frozen at build time
+        — features are layer-0 data, so the schedule's layer-0 tier applies
+        to them throughout. Re-jits the step only when the schedule actually
+        changes tier."""
+        codec = as_codec(self.codec)
+        advance = getattr(codec, "at_epoch", None)
+        if advance is None:
+            return
+        new = advance(epoch)
+        if (new.ratio(0), new.ratio(1)) != (codec.ratio(0), codec.ratio(1)):
+            self.codec = new
+            self.__dict__.pop("_train_step", None)
+        else:
+            self.codec = new
 
     def train_step(self) -> StepMetrics:
         t0 = time.perf_counter()
         pb, wait = self.engine.next_batch()
         t1 = time.perf_counter()
-        loss, self.params, self.opt_state = self._train_step(
-            self.params, self.opt_state, pb.stacked
-        )
+        if as_codec(self.codec).lossless:
+            loss, self.params, self.opt_state = self._train_step(
+                self.params, self.opt_state, pb.stacked
+            )
+        else:
+            if self.ef_state is None:
+                self.ef_state = self._init_ef()
+            loss, self.params, self.opt_state, self.ef_state = (
+                self._train_step(self.params, self.opt_state, pb.stacked,
+                                 self.ef_state))
         loss = float(loss)  # blocks on the device step
         t2 = time.perf_counter()
         wall = t2 - t0
@@ -411,6 +468,7 @@ class MiniBatchTrainer:
             cache_hits=np.array([s.num_cache_hit for s in fetch]),
             remote_misses=np.array([s.num_remote_miss for s in fetch]),
             miss_bytes=np.array([s.miss_bytes for s in fetch]),
+            wire_bytes=np.array([s.wire_bytes for s in fetch]),
             fetch_time_host=pb.fetch_time,
             transfer_time_host=pb.transfer_time,
             step_wall_host=wall,

@@ -167,19 +167,24 @@ def gat_layer(p, x, blk, sync, *, final: bool,
     m = jnp.maximum(m, e_self)
     m_safe = jax.lax.stop_gradient(jnp.maximum(m, -1e29))  # isolated vertices
 
+    # 2) + 3) share ONE payload carrying [s_src | z]: a single rotation/
+    # gather serves both the weight and the message, and — crucially for
+    # lossy wire codecs — the denominator and numerator decode the SAME
+    # encoded scores. Codec encoding is deterministic, so both aggregates
+    # see bit-identical attention weights and the softmax normalisation
+    # survives quantisation (separate payloads would quantise s_src at two
+    # different per-tensor scales and bias num/den against each other).
+    payload = jnp.concatenate([s_src, z.reshape(n, h_heads * dh)], axis=1)
+
     # 2) global sum of exp (self term added post-completion, ungated:
     # completed aggregates are replica-consistent)
     den = sync.edge_aggregate(
-        blk, s_src,
-        lambda src, dst, mask: (jnp.exp(score(src, dst) - m_safe[dst])
-                                * mask[:, None]),
+        blk, payload,
+        lambda src, dst, mask: (jnp.exp(score(src[:, :h_heads], dst)
+                                        - m_safe[dst]) * mask[:, None]),
         backend=backend)
     w_self = jnp.exp(e_self - m_safe)
     den = jnp.maximum(den + w_self, 1e-16)
-
-    # 3) attention-weighted aggregate; the payload carries [s_src | z] so a
-    # single rotation/gather serves both the weight and the message
-    payload = jnp.concatenate([s_src, z.reshape(n, h_heads * dh)], axis=1)
 
     def weighted_msg(src, dst, mask):
         w = jnp.exp(score(src[:, :h_heads], dst) - m_safe[dst]) * mask[:, None]
@@ -202,6 +207,11 @@ def forward(spec: GNNSpec, params: Params, x, blk, sync) -> jnp.ndarray:
     [Vloc+1, num_classes] (valid at every replica; loss is master-gated)."""
     layer_fn = _LAYERS[spec.model]
     h = x
+    # aggregate ordinals restart per forward pass (VariableRatioCodec ramps
+    # its compression ratio on them; a no-op for fixed-ratio codecs)
+    reset = getattr(sync, "reset_layer_counter", None)
+    if reset is not None:
+        reset()
     n_layers = len(params["layers"])
     for li, p in enumerate(params["layers"]):
         h = layer_fn(p, h, blk, sync, final=(li == n_layers - 1),

@@ -20,7 +20,7 @@ and what it costs — is the strategy:
                (B = max pair bucket) = 2·k²·B·d·4 bytes cluster-wide
                (`sync_bytes_per_round`, pinned against compiled HLO in
                tests/test_dist_lowering.py). Volume tracks the replication
-               factor — the paper's key mechanism (DESIGN.md §2).
+               factor — the paper's key mechanism (README architecture map).
   RingSync   — 1.5D block rotation (CAGNET regime, `BlockRowBook`): no
                replicas exist, so nothing is "completed" — instead the
                payload blocks rotate around a `lax.ppermute` ring. Stage s
@@ -33,6 +33,24 @@ and what it costs — is the strategy:
                Per round, ring < dense for every k ≥ 2 since
                (k−1)/k · V < 2·V; no second broadcast pass is needed
                because block rows are owned exactly once.
+
+Per-aggregate collective volume (cluster-wide; wire bytes are the same
+formulas with the f32 element replaced by `codec.wire_bytes`, see
+`sync_wire_bytes_per_round`):
+
+    strategy   logical bytes (fp32)          wire bytes (codec c)
+    dense      2·k·(V+1)·d·4                 2·k·c.wire_bytes((V+1, d))
+    halo       2·k²·B·d·4                    2·k·c.wire_bytes((k, B, d))
+    ring       k·(k−1)·(Vb+1)·d·4            k·(k−1)·c.wire_bytes((Vb+1, d))
+
+Every strategy carries a `codec` (repro/core/wire.py, default fp32 ==
+today's bytes): payloads encode BEFORE the collective and decode after, so
+the compiled HLO moves the compressed dtype — `all_to_all`/`ppermute` of
+int8 is ¼ the bytes, pinned in tests/test_dist_lowering.py. The fp32 codec
+is the identity, keeping the default trace bitwise-identical to the
+pre-codec code. Lossy caveats: DenseSync's `reduce_max` and the -1e30 mask
+fills stay f32 (an extreme fill through a per-tensor scale would erase the
+signal; the receiver re-masks, so fills never influence results anyway).
 
 Local/Dense/Halo additionally keep their historical low-level surface
 (`reduce_sum` / `reduce_max` / `broadcast`) — partial-aggregate completion —
@@ -47,13 +65,14 @@ dry-run), because they only use axis-name collectives.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition_book import BlockRowBook, EdgePartitionBook
+from repro.core.wire import Codec, as_codec
 from repro.kernels import ops
 
 
@@ -123,7 +142,29 @@ def build_blocks(
 # ---------------------------------------------------------------------------
 
 
-class _PartialAggSync:
+class _CodecSync:
+    """Wire-codec plumbing shared by every strategy.
+
+    Strategies are frozen dataclasses, so the trace-time aggregate counter
+    lives behind `object.__setattr__`. `models.forward` resets it at the
+    top of each forward pass, making the ordinal "which aggregate of this
+    forward is encoding" — the depth signal `VariableRatioCodec` ramps on.
+    Python-level state only: it is fixed at trace time, never a tracer.
+    """
+
+    def _codec(self) -> Codec:
+        return as_codec(getattr(self, "codec", None))
+
+    def reset_layer_counter(self) -> None:
+        object.__setattr__(self, "_agg_layer", 0)
+
+    def _take_layer(self) -> int:
+        layer = int(getattr(self, "_agg_layer", 0))
+        object.__setattr__(self, "_agg_layer", layer + 1)
+        return layer
+
+
+class _PartialAggSync(_CodecSync):
     """Shared `edge_aggregate` for the partial-aggregate family.
 
     Local/Dense/Halo all follow the same recipe: reduce messages over the
@@ -137,6 +178,7 @@ class _PartialAggSync:
 
     def edge_aggregate(self, blk: "Block", payload, msg_fn, *,
                        reduce: str = "sum", backend: str = "scatter"):
+        object.__setattr__(self, "_cur_layer", self._take_layer())
         n = payload.shape[0]
         messages = jnp.concatenate([
             msg_fn(payload[blk.esrc], blk.edst, blk.emask),
@@ -154,7 +196,9 @@ class _PartialAggSync:
 
 @dataclasses.dataclass(frozen=True)
 class LocalSync(_PartialAggSync):
-    """k=1: partial aggregates are already complete."""
+    """k=1: partial aggregates are already complete (codec: nothing moves)."""
+
+    codec: Optional[Union[str, Codec]] = None
 
     def reduce_sum(self, h):
         return h
@@ -176,6 +220,7 @@ class DenseSync(_PartialAggSync):
     blk: Block
     num_vertices: int
     axis: str
+    codec: Optional[Union[str, Codec]] = None
 
     def _to_global(self, h):
         g = jnp.zeros((self.num_vertices + 1, h.shape[-1]), h.dtype)
@@ -183,7 +228,15 @@ class DenseSync(_PartialAggSync):
         return g
 
     def reduce_sum(self, h):
-        g = jax.lax.psum(self._to_global(h), self.axis)
+        codec = self._codec()
+        g = self._to_global(h)
+        if not codec.lossless:
+            # quantise the per-device partial BEFORE the psum (the reduce
+            # sums dequantised views — same semantics as compressed_psum)
+            payload, meta = codec.encode(
+                g, layer=getattr(self, "_cur_layer", 0))
+            g = codec.decode(payload, meta)
+        g = jax.lax.psum(g, self.axis)
         return g[self.blk.vglobal] * self.blk.vmask[:, None]
 
     def reduce_max(self, h):
@@ -207,14 +260,30 @@ class HaloSync(_PartialAggSync):
     reduce_*: every mirror packs its partial rows for each master partition
     into fixed buckets; one all_to_all later, masters scatter-accumulate.
     broadcast: the exact reverse routing pushes completed rows back.
+
+    The codec brackets `_exchange`: the [k, B, d] bucket buffer encodes
+    before the all_to_all (the HLO moves the compressed dtype) and decodes
+    after. Scale meta is per SENDER, so it travels by `all_gather` — after
+    the all_to_all, received bucket j was encoded by device j, i.e. decoded
+    with gathered meta[j]. Lossy `reduce_max` sends 0.0 in masked slots
+    instead of -1e30 (the receiver re-masks, so the fill is inert either
+    way; an extreme fill would destroy a per-tensor int8 scale).
     """
 
     blk: Block
     axis: str
+    codec: Optional[Union[str, Codec]] = None
 
     def _exchange(self, buf):
         # buf [k, B, d]; result[j] = what device j sent to me
-        return jax.lax.all_to_all(buf, self.axis, split_axis=0, concat_axis=0)
+        codec = self._codec()
+        payload, meta = codec.encode(buf, layer=getattr(self, "_cur_layer", 0))
+        out = jax.lax.all_to_all(payload, self.axis,
+                                 split_axis=0, concat_axis=0)
+        if meta is not None:
+            # [k] sender scales, ordered by device index == bucket index
+            meta = jax.lax.all_gather(meta, self.axis).reshape(-1, 1, 1)
+        return codec.decode(out, meta)
 
     def reduce_sum(self, h):
         blk = self.blk
@@ -225,7 +294,8 @@ class HaloSync(_PartialAggSync):
 
     def reduce_max(self, h):
         blk = self.blk
-        send = jnp.where(blk.send_mask[..., None], h[blk.send_idx], -1e30)
+        fill = 0.0 if not self._codec().lossless else -1e30
+        send = jnp.where(blk.send_mask[..., None], h[blk.send_idx], fill)
         recv = self._exchange(send)
         return h.at[blk.recv_idx].max(jnp.where(blk.recv_mask[..., None], recv, -1e30))
 
@@ -302,7 +372,7 @@ def build_ring_blocks(
 
 
 @dataclasses.dataclass(frozen=True)
-class RingSync:
+class RingSync(_CodecSync):
     """1.5D ring-pipelined aggregation (CAGNET-style block rotation).
 
     At stage s device p holds block (p+s) mod k of the payload; the matching
@@ -311,10 +381,17 @@ class RingSync:
     transfer overlaps the segment-SpMM. k−1 permutes of [Vb+1, d] per
     aggregate; no reduce/broadcast pair exists because every row is owned
     exactly once.
+
+    The codec encodes the block ONCE before the loop; the encoded
+    (payload, meta) pair is what rotates — every hop ships the compressed
+    dtype (no re-encode drift: each device decodes the same bits), and the
+    stage decodes only the view it aggregates. With fp32 the encode/decode
+    are identity and the trace is exactly the historical one.
     """
 
     axis: str
     k: int
+    codec: Optional[Union[str, Codec]] = None
 
     def _perm(self):
         # device j hands its current block to j-1: after s hops, device p
@@ -323,16 +400,22 @@ class RingSync:
 
     def edge_aggregate(self, blk: RingBlock, payload, msg_fn, *,
                        reduce: str = "sum", backend: str = "scatter"):
+        codec = self._codec()
         n = payload.shape[0]
         tiled = blk.chunk_agg_order.shape[-1] > 0
-        buf = payload
+        buf, meta = codec.encode(payload, layer=self._take_layer())
         acc = None
         for s in range(self.k):
             # issue the transfer BEFORE this stage's compute: XLA schedules
             # the collective-permute-start/done pair around the SpMM
-            nxt = (jax.lax.ppermute(buf, self.axis, self._perm())
-                   if s < self.k - 1 else None)
-            messages = msg_fn(buf[blk.chunk_esrc[s]], blk.chunk_edst[s],
+            if s < self.k - 1:
+                nxt = jax.lax.ppermute(buf, self.axis, self._perm())
+                nxt_meta = (jax.lax.ppermute(meta, self.axis, self._perm())
+                            if meta is not None else None)
+            else:
+                nxt = nxt_meta = None
+            cur = codec.decode(buf, meta)
+            messages = msg_fn(cur[blk.chunk_esrc[s]], blk.chunk_edst[s],
                               blk.chunk_emask[s])
             part = ops.aggregate(
                 messages, blk.chunk_edst[s], n,
@@ -345,7 +428,7 @@ class RingSync:
             else:
                 acc = jnp.maximum(acc, part) if reduce == "max" else acc + part
             if nxt is not None:
-                buf = nxt
+                buf, meta = nxt, nxt_meta
         return acc
 
     def psum(self, v):
@@ -357,21 +440,25 @@ class RingSync:
 SYNC_MODES = ("local", "dense", "halo", "ring")
 
 
-def make_sync(mode: str, blk, num_vertices: int, axis: str):
+def make_sync(mode: str, blk, num_vertices: int, axis: str, codec=None):
     """Instantiate a SyncStrategy. `blk` is a `Block` for local/dense/halo
-    and a `RingBlock` for ring (1.5D layouts have no halo tables)."""
+    and a `RingBlock` for ring (1.5D layouts have no halo tables).
+    `codec` is a name or `repro.core.wire.Codec` (None -> fp32)."""
+    codec = as_codec(codec)
     if mode == "local":
-        return LocalSync()
+        return LocalSync(codec=codec)
     if mode == "dense":
-        return DenseSync(blk=blk, num_vertices=num_vertices, axis=axis)
+        return DenseSync(blk=blk, num_vertices=num_vertices, axis=axis,
+                         codec=codec)
     if mode == "halo":
-        return HaloSync(blk=blk, axis=axis)
+        return HaloSync(blk=blk, axis=axis, codec=codec)
     if mode == "ring":
         if not isinstance(blk, RingBlock):
             raise TypeError(
                 "sync mode 'ring' needs a RingBlock (build_ring_blocks over "
                 f"a BlockRowBook); got {type(blk).__name__}")
-        return RingSync(axis=axis, k=int(blk.chunk_esrc.shape[0]))
+        return RingSync(axis=axis, k=int(blk.chunk_esrc.shape[0]),
+                        codec=codec)
     raise ValueError(
         f"unknown sync mode {mode!r}: valid strategies are "
         f"{', '.join(SYNC_MODES)}")
@@ -403,3 +490,36 @@ def sync_bytes_per_round(book, d: int, mode: str) -> int:
 def ring_bytes_per_round(book: BlockRowBook, d: int) -> int:
     """Cluster-wide `ppermute` bytes of one ring aggregate (k·(k−1)·(Vb+1)·d·4)."""
     return sync_bytes_per_round(book, d, "ring")
+
+
+def sync_wire_bytes_per_round(book, d: int, mode: str, codec=None,
+                              layer: int = 0) -> int:
+    """Codec-aware twin of `sync_bytes_per_round`: bytes that actually cross
+    the network for ONE complete aggregate, all devices, after encoding.
+
+    Same collective structure, with each per-device f32 buffer priced by
+    `codec.wire_bytes` (payload + meta) instead of nelem·4 — the fp32 codec
+    reproduces `sync_bytes_per_round` exactly. `layer` is the aggregate
+    ordinal (only `VariableRatioCodec` cares).
+    """
+    codec = as_codec(codec)
+
+    def wb(shape):
+        try:
+            return codec.wire_bytes(shape, layer=layer)
+        except TypeError:  # fixed-ratio codecs take no layer kwarg
+            return codec.wire_bytes(shape)
+
+    if mode == "halo":
+        # 2 all_to_alls per round, each device encoding one [k, B, d] buffer
+        return 2 * book.k * wb((book.k, book.bucket, d))
+    if mode == "dense":
+        # psum of the quantised view: ~2x the encoded [V+1, d] buffer per
+        # device (ring all-reduce), matching the logical formula's factor
+        return 2 * book.k * wb((book.num_vertices + 1, d))
+    if mode == "ring":
+        if not isinstance(book, BlockRowBook):
+            raise TypeError("ring volume needs a BlockRowBook")
+        # k-1 ppermute stages per device, each shipping one encoded block
+        return book.k * (book.k - 1) * wb((book.v_block + 1, d))
+    return 0

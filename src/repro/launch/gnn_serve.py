@@ -24,6 +24,7 @@ from repro.core.graph import paper_graph
 from repro.core.metrics import edge_partition_metrics, vertex_partition_metrics
 from repro.core.partition_book import build_vertex_book
 from repro.core.vertex_partition import VERTEX_PARTITIONERS, partition_vertices
+from repro.core.wire import CODECS
 from repro.gnn.feature_store import CACHE_POLICIES
 from repro.gnn.inference import (
     LayerwiseInference,
@@ -60,6 +61,11 @@ def main() -> None:
                     help="micro-batch size cap")
     ap.add_argument("--max-wait", type=float, default=5e-4,
                     help="seconds a request may wait for its micro-batch")
+    ap.add_argument("--codec", default="fp32", choices=list(CODECS),
+                    help="wire codec (core/wire.py) on the embedding store: "
+                         "remote-miss rows are shipped encoded and decoded "
+                         "at the reader; service time is priced from "
+                         "encoded bytes")
     ap.add_argument("--cache-policy", default="none",
                     choices=list(CACHE_POLICIES))
     ap.add_argument("--cache-budget", type=int, default=0,
@@ -124,7 +130,7 @@ def main() -> None:
         g, vbook, spec, params, embeddings,
         hops=args.hops, fanout=args.fanout, max_batch=args.batch,
         max_wait=args.max_wait, cache_policy=args.cache_policy,
-        cache_budget=args.cache_budget, seed=args.seed,
+        cache_budget=args.cache_budget, seed=args.seed, codec=args.codec,
     )
     if args.cache_budget:
         print(f"[serve] embedding cache: policy={args.cache_policy} "
@@ -145,6 +151,7 @@ def main() -> None:
           f"sustainable {report.sustainable_qps():.0f} qps/cluster")
     print(f"[serve] store traffic: hit_rate {report.fetch.hit_rate:.2f}  "
           f"miss {report.fetch.miss_bytes/2**20:.2f} MiB  "
+          f"wire {report.fetch.wire_bytes/2**20:.2f} MiB ({args.codec})  "
           f"host compute p50 {np.percentile(report.host_time, 50)*1e3:.2f} "
           f"ms/batch")
 
@@ -154,7 +161,7 @@ def main() -> None:
             qps=args.qps, hops=args.hops, fanout=args.fanout,
             max_batch=args.batch, max_wait=args.max_wait,
             cache_policy=args.cache_policy, cache_budget=args.cache_budget,
-            partition_time=pt, partition_quality=quality,
+            partition_time=pt, partition_quality=quality, codec=args.codec,
         )
         study.write_rows([row], args.out_json)
         print(f"[serve] wrote study row -> {args.out_json}")

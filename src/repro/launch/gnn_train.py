@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import cost_model, study
 from repro.core.edge_partition import EDGE_PARTITIONERS, partition_edges
+from repro.core.wire import CODECS
 from repro.core.graph import paper_graph
 from repro.core.metrics import edge_partition_metrics, vertex_partition_metrics
 from repro.core.vertex_partition import VERTEX_PARTITIONERS, partition_vertices
@@ -64,6 +65,13 @@ def main() -> None:
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="batches prepared ahead of the device step "
                          "(bounded queue; only read with --overlap)")
+    ap.add_argument("--codec", default="fp32", choices=list(CODECS),
+                    help="wire codec (core/wire.py) for the byte-moving "
+                         "paths: replica sync + gradient all-reduce "
+                         "(fullbatch) resp. feature fetch + gradient "
+                         "all-reduce (minibatch). fp32 is exact; int8 adds "
+                         "error feedback on gradients; variable ramps the "
+                         "ratio by layer and epoch")
     ap.add_argument("--cache-policy", default="none",
                     choices=list(CACHE_POLICIES),
                     help="per-worker remote-feature cache policy (minibatch)")
@@ -106,15 +114,18 @@ def main() -> None:
         tr = FullBatchTrainer.build(
             g, assignment, args.k, spec, feats, labels, train_mask,
             sync_mode=args.sync_mode, mode="sim", seed=args.seed,
+            codec=args.codec,
         )
-        est = cost_model.fullbatch_epoch(tr.book, spec)
+        est = cost_model.fullbatch_epoch(tr.book, spec, codec=args.codec)
         print(f"[gnn] paper-cluster epoch estimate: {est.epoch_time*1e3:.1f} ms, "
-              f"comm {est.comm_bytes.sum()/2**20:.1f} MiB, "
+              f"comm {est.comm_bytes.sum()/2**20:.1f} MiB "
+              f"(wire {est.wire_bytes.sum()/2**20:.1f} MiB, {args.codec}), "
               f"mem max {est.memory.max()/2**20:.1f} MiB"
               + (" (OOM!)" if est.oom else ""))
         loss = float("nan")
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
+            tr.set_epoch(epoch)
             loss = tr.train_step()
             print(f"[gnn] epoch {epoch:3d} loss {loss:.4f} "
                   f"({time.perf_counter()-t1:.2f}s)")
@@ -122,7 +133,7 @@ def main() -> None:
             row = study.fullbatch_result_row(
                 args.graph, partitioner, args.k, spec,
                 metrics=m, partition_time=pt, est=est,
-                sync_mode=args.sync_mode)
+                sync_mode=args.sync_mode, codec=args.codec)
             row["loss"] = loss
             study.write_rows([row], args.out_json)
             print(f"[gnn] wrote study row -> {args.out_json}")
@@ -141,6 +152,7 @@ def main() -> None:
             global_batch=args.batch, seed=args.seed, rebalance=args.rebalance,
             cache_policy=args.cache_policy, cache_budget=args.cache_budget,
             overlap=args.overlap, prefetch_depth=args.prefetch_depth,
+            codec=args.codec,
         )
         if args.cache_budget:
             print(f"[gnn] feature cache: policy={args.cache_policy} "
@@ -150,6 +162,7 @@ def main() -> None:
         sms, losses = [], []
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
+            tr.set_epoch(epoch)
             losses, remotes, hit_rates = [], [], []
             sms = []
             for _ in range(steps_per_epoch):
@@ -162,7 +175,7 @@ def main() -> None:
                 sm.input_vertices, sm.remote_vertices, sm.edges,
                 tr.book.sizes, spec,
                 remote_miss_vertices=sm.remote_misses,
-                cached_vertices=tr.store.cache_sizes)
+                cached_vertices=tr.store.cache_sizes, codec=args.codec)
             overlap_note = ""
             if args.overlap:
                 eff = np.mean([s.overlap_efficiency for s in sms])
@@ -189,7 +202,7 @@ def main() -> None:
                 inputs, remote, edges, tr.book.sizes, spec,
                 seeds_per_worker=max(args.batch // args.k, 1),
                 remote_miss_vertices=misses,
-                cached_vertices=tr.store.cache_sizes)
+                cached_vertices=tr.store.cache_sizes, codec=args.codec)
             row = study.minibatch_result_row(
                 args.graph, args.partitioner, args.k, spec,
                 metrics=m, partition_time=pt, batch=args.batch,
@@ -198,7 +211,7 @@ def main() -> None:
                 cache_policy=args.cache_policy,
                 cache_budget=args.cache_budget,
                 overlap=args.overlap, prefetch_depth=args.prefetch_depth,
-                host_times=study.host_phase_means(sms))
+                host_times=study.host_phase_means(sms), codec=args.codec)
             row["loss"] = float(np.mean(losses))
             study.write_rows([row], args.out_json)
             print(f"[gnn] wrote study row -> {args.out_json}")

@@ -3,8 +3,9 @@
 int8 uniform quantisation per tensor with an error-feedback accumulator
 (Seide et al. / Karimireddy et al.): the quantisation residual is carried to
 the next step, so compression error does not bias convergence — it acts like
-a delayed gradient. Used on the `pod` axis where links are slowest
-(DESIGN.md §7); payload shrinks 4x vs f32 / 2x vs bf16.
+a delayed gradient. Used on the slowest links — the data-parallel gradient
+reduce, via `core/wire.py`'s `Int8EFCodec`/`codec_grad_reduce` wrappers;
+payload shrinks 4x vs f32 / 2x vs bf16.
 
 The transform is collective-agnostic: compress -> (all-reduce happens on the
 int8 payload's dequantised view in the caller) -> decompress. For the

@@ -126,11 +126,13 @@ class ServeEngine:
     def estimate(self, batch: SampledBatch,
                  stats: FetchStats,
                  cluster: ClusterSpec = PAPER_CLUSTER):
-        """Cluster-model service time of one answered micro-batch."""
+        """Cluster-model service time of one answered micro-batch (priced
+        with whatever wire codec is installed on the embedding store)."""
         return cost_model.serve_request(
             stats.num_input, stats.num_remote, stats.num_remote_miss,
             batch.num_edges, self.spec,
             embed_dim=self.store.row_dim, hops=self.hops, cluster=cluster,
+            codec=getattr(self.store, "codec", None),
         )
 
 
@@ -260,8 +262,7 @@ def run_serving_sim(
         service_time=np.asarray(service_times),
         batch_size=np.asarray(bsizes, dtype=np.int64),
         batch_worker=np.asarray(bworkers, dtype=np.int64),
-        fetch=(FetchStats.merge(all_stats) if all_stats
-               else FetchStats(0, 0, 0, 0, 0, 0, 0)),
+        fetch=FetchStats.merge(all_stats),
         duration=float(arrivals.max()) if arrivals.size else 0.0,
     )
 
@@ -280,6 +281,7 @@ def build_serving(
     cache_policy: str = "none",
     cache_budget: int = 0,
     seed: int = 0,
+    codec=None,
 ) -> tuple[list, list, RowStore]:
     """Wire per-worker (engines, batchers) over one embedding store.
 
@@ -298,7 +300,7 @@ def build_serving(
     source = embeddings[L - 1 - hops]
     store = build_embedding_stores(
         graph, vbook, [source], policy=cache_policy, budget=cache_budget,
-        seed=seed,
+        seed=seed, codec=codec,
     )[0]
     fanouts = (fanout,) * hops
     tiled = spec.agg_backend != "scatter"

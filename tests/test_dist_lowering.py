@@ -270,6 +270,63 @@ def test_ring_sync_bytes_match_compiled_hlo():
     assert "cp_count 3" in out
 
 
+def test_ring_sync_int8_codec_shrinks_compiled_hlo():
+    """With the int8 wire codec the compiled ring rotation moves s8 payload
+    (+ one f32 scale per block): cluster permute bytes equal
+    `sync_wire_bytes_per_round(..., codec="int8")` = k·(k−1)·((Vb+1)·d + 4)
+    — a ~4x shrink vs the fp32 pin above. The payload and its scale may
+    lower as separate permutes, so the op count lands in [k−1, 2(k−1)]."""
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import PartitionSpec as P
+        from repro.core.graph import paper_graph
+        from repro.core.partition_book import build_blockrow_book
+        from repro.gnn.sync import RingSync, build_ring_blocks, \\
+            ring_bytes_per_round, sync_wire_bytes_per_round
+        from repro.launch.hlo import collective_bytes_from_hlo
+        from repro.launch.mesh import make_mesh
+
+        g = paper_graph("OR", scale=0.01, seed=0)
+        k, d = 4, 8
+        book = build_blockrow_book(g, k)
+        rng = np.random.default_rng(0)
+        feats = rng.normal(size=(g.num_vertices, d)).astype(np.float32)
+        labels = np.zeros(g.num_vertices, np.int32)
+        blocks = build_ring_blocks(book, feats, labels,
+                                   np.zeros(g.num_vertices, bool))
+        mesh = make_mesh((4,), ("parts",))
+
+        def per_device(blocks_local):
+            blk = jax.tree.map(lambda a: a[0], blocks_local)
+            sync = RingSync(axis="parts", k=k, codec="int8")
+            h = sync.edge_aggregate(blk, blk.x,
+                                    lambda s, dst, m: s * m[:, None])
+            return h[None]
+
+        shard_map = (jax.shard_map if hasattr(jax, "shard_map")
+                     else __import__("jax.experimental.shard_map",
+                                     fromlist=["shard_map"]).shard_map)
+        kw = ({"check_vma": False} if hasattr(jax, "shard_map")
+              else {"check_rep": False})
+        fn = shard_map(per_device, mesh=mesh, in_specs=(P("parts"),),
+                       out_specs=P("parts"), **kw)
+        hlo = jax.jit(fn).lower(blocks).compile().as_text()
+        coll = collective_bytes_from_hlo(hlo)
+        got = coll["bytes_per_kind"]["collective-permute"]
+        count = coll["count_per_kind"]["collective-permute"]
+        expect_wire = sync_wire_bytes_per_round(book, d, "ring",
+                                                codec="int8")
+        fp32_cluster = ring_bytes_per_round(book, d)
+        print("cp_count", count, "cluster", got * k,
+              "wire", expect_wire, "fp32", fp32_cluster)
+        assert got * k == expect_wire, (got, k, expect_wire)
+        assert k - 1 <= count <= 2 * (k - 1), count
+        # the quarter-width claim, with slack for the per-block f32 scale
+        assert got * k < 0.3 * fp32_cluster, (got * k, fp32_cluster)
+    """, devices=4)
+    assert "cp_count" in out
+
+
 def test_halo_sync_bytes_match_compiled_hlo():
     """`sync_bytes_per_round` (2*k^2*B*d*4 cluster-wide for halo) pinned
     against the all-to-all bytes XLA actually emitted: the compiled
