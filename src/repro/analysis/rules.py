@@ -1,0 +1,362 @@
+"""The rule registry: distributed-training invariants checked per program.
+
+Every rule is a function `(Program) -> list[Finding]` registered under a
+stable name. `run_rules` drives the cross product (each rule decides
+applicability from the program's kind/fields and returns [] when it does
+not apply); a rule that raises is converted into an error finding rather
+than crashing the gate, so a broken rule can never silently pass a PR.
+
+The five core rules:
+
+  no-scatter         traced jaxprs of scatter-free cells must not contain
+                     scatter-add/scatter-max (and anchor cells MUST — a
+                     blind walker is itself a violation)
+  dtype-policy       the only narrowing converts from >=f32 a traced
+                     program may contain are the wire codec's declared
+                     wire dtypes (`repro.core.wire.narrow_wire_dtypes`)
+  collective-budget  compiled HLO collective op counts and payload bytes
+                     equal the analytic prediction
+                     (`repro.gnn.sync.collective_budget`), with no
+                     unbudgeted collective kinds
+  donation           declared `donate_argnums` match the buffer-donation
+                     policy (empty on XLA:CPU, carries donated elsewhere),
+                     and donating compiles carry `input_output_alias`
+  retrace-guard      driving a program sweep recompiles at most its
+                     budget (static padded shapes / epoch-tier changes
+                     only) — counted via jax.monitoring backend-compile
+                     events on a pre-warmed process
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+from repro.analysis.hlo import analyze_hlo, input_output_aliases_from_hlo
+from repro.analysis.jaxpr import narrowing_converts, primitive_names
+from repro.analysis.programs import Program
+
+__all__ = [
+    "Finding", "Report", "RULES", "register_rule", "run_rules",
+    "count_compiles", "check_scatter", "check_narrowing", "check_budget",
+]
+
+LEVELS = ("error", "warn", "info")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    program: str
+    level: str                    # error | warn | info
+    message: str
+    data: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list
+    programs_run: list
+    rules_run: list
+    elapsed_s: float = 0.0
+
+    @property
+    def errors(self) -> list:
+        return [f for f in self.findings if f.level == "error"]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.errors else 0
+
+    def to_dict(self) -> dict:
+        counts = {lv: 0 for lv in LEVELS}
+        for f in self.findings:
+            counts[f.level] = counts.get(f.level, 0) + 1
+        return {
+            "schema": "gnn-lint-report/v1",
+            "programs": self.programs_run,
+            "rules": self.rules_run,
+            "counts": counts,
+            "exit_code": self.exit_code,
+            "elapsed_s": round(self.elapsed_s, 3),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str
+    fn: Callable[[Program], list]
+
+
+RULES: dict = {}
+
+
+def register_rule(name: str, doc: str):
+    def deco(fn):
+        RULES[name] = Rule(name=name, doc=doc, fn=fn)
+        return fn
+
+    return deco
+
+
+def run_rules(programs: Iterable[Program],
+              rules: Optional[Iterable[str]] = None) -> Report:
+    """Run the selected rules (default: all) over the programs."""
+    selected = [RULES[n] for n in (rules or sorted(RULES))]
+    programs = list(programs)
+    t0 = time.perf_counter()
+    findings: list = []
+    for prog in programs:
+        for rule in selected:
+            try:
+                findings.extend(rule.fn(prog))
+            except Exception as exc:  # a crashed rule must fail the gate
+                findings.append(Finding(
+                    rule=rule.name, program=prog.name, level="error",
+                    message=f"rule crashed: {type(exc).__name__}: {exc}",
+                ))
+    return Report(
+        findings=findings,
+        programs_run=[p.name for p in programs],
+        rules_run=[r.name for r in selected],
+        elapsed_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared check helpers (also the API the migrated tests call directly)
+# ---------------------------------------------------------------------------
+
+
+def check_scatter(jaxprs: Iterable, expect_free: bool) -> Optional[str]:
+    """None when the traced programs match the expectation, else the
+    violation message. `expect_free=False` is the anchor direction: the
+    walker must SEE the scatter oracle's scatters."""
+    from repro.kernels.ops import SCATTER_PRIMITIVES
+
+    found: set = set()
+    for cj in jaxprs:
+        found |= primitive_names(cj) & set(SCATTER_PRIMITIVES)
+    if expect_free and found:
+        return f"scatter primitives in a scatter-free cell: {sorted(found)}"
+    if not expect_free and not found:
+        return ("anchor cell traced clean — the scatter walker is blind "
+                f"(expected one of {list(SCATTER_PRIMITIVES)})")
+    return None
+
+
+def check_narrowing(jaxprs: Iterable, codec) -> list:
+    """Narrowing converts (>=4-byte float source -> strictly smaller dtype)
+    not licensed by the codec's wire dtypes. Returns [(src, dst, count)]."""
+    from repro.core.wire import narrow_wire_dtypes
+
+    allowed = set(narrow_wire_dtypes(codec)) | {"bool"}
+    bad: list = []
+    for cj in jaxprs:
+        for (src, dst), n in narrowing_converts(cj).items():
+            if dst not in allowed:
+                bad.append((src, dst, n))
+    return bad
+
+
+def check_budget(hlo_text: str, budget: dict, k: int) -> list:
+    """Hold compiled HLO to a `collective_budget` prediction. Returns
+    violation messages (empty = the bytes XLA emitted are EXACTLY the
+    analytic cluster bytes and every kind's op count is in range)."""
+    res = analyze_hlo(hlo_text)
+    problems: list = []
+    for kind, want in budget.items():
+        count = res["count_per_kind"].get(kind, 0)
+        lo, hi = want["count"]
+        if not lo <= count <= hi:
+            problems.append(
+                f"{kind}: {count} ops, budget [{lo}, {hi}]")
+        got = res["bytes_per_kind"].get(kind, 0) * k
+        if got != want["cluster_bytes"]:
+            problems.append(
+                f"{kind}: {got} cluster bytes (per-device x k={k}), "
+                f"budget {want['cluster_bytes']}")
+    extra = sorted(set(res["count_per_kind"]) - set(budget))
+    if extra:
+        problems.append(f"unbudgeted collective kinds emitted: {extra}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Compile counting (retrace-guard)
+# ---------------------------------------------------------------------------
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_counter = {"n": 0, "installed": False}
+
+
+def _install_compile_listener() -> None:
+    # jax.monitoring listeners cannot be unregistered individually, so one
+    # process-wide counter is installed on first use and shared forever
+    if _compile_counter["installed"]:
+        return
+    import jax.monitoring
+
+    def _listener(event, duration=0.0, **kwargs):
+        if event == _COMPILE_EVENT:
+            _compile_counter["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    _compile_counter["installed"] = True
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Counts XLA backend compiles inside the block: `box.count` after."""
+
+    class _Box:
+        count = 0
+
+    _install_compile_listener()
+    box = _Box()
+    start = _compile_counter["n"]
+    try:
+        yield box
+    finally:
+        box.count = _compile_counter["n"] - start
+
+
+# ---------------------------------------------------------------------------
+# The rules
+# ---------------------------------------------------------------------------
+
+
+@register_rule(
+    "no-scatter",
+    "scatter-free cells trace without scatter-add/scatter-max; anchor "
+    "cells must still trip the walker")
+def _rule_no_scatter(prog: Program) -> list:
+    if prog.kind != "jaxpr" or prog.expect_scatter_free is None:
+        return []
+    msg = check_scatter(prog.make(), prog.expect_scatter_free)
+    if msg is not None:
+        return [Finding("no-scatter", prog.name, "error", msg)]
+    return [Finding("no-scatter", prog.name, "info",
+                    "scatter-free" if prog.expect_scatter_free
+                    else "anchor: scatter seen as expected")]
+
+
+@register_rule(
+    "dtype-policy",
+    "the only narrowing converts from fp32+ are the wire codec's declared "
+    "wire dtypes")
+def _rule_dtype_policy(prog: Program) -> list:
+    if prog.kind != "jaxpr" or prog.codec is None:
+        return []
+    bad = check_narrowing(prog.make(), prog.codec)
+    if bad:
+        detail = ", ".join(f"{s}->{d} x{n}" for s, d, n in bad)
+        return [Finding(
+            "dtype-policy", prog.name, "error",
+            f"narrowing converts outside codec {prog.codec!r}: {detail}",
+            data={"converts": [list(b) for b in bad]})]
+    return [Finding("dtype-policy", prog.name, "info",
+                    f"narrowing converts all licensed by {prog.codec!r}")]
+
+
+@register_rule(
+    "collective-budget",
+    "compiled collective op counts and payload bytes equal the analytic "
+    "collective_budget prediction, no unbudgeted kinds")
+def _rule_collective_budget(prog: Program) -> list:
+    if prog.kind != "hlo" or prog.budget is None:
+        return []
+    import jax
+
+    if jax.device_count() < prog.devices:
+        return [Finding(
+            "collective-budget", prog.name, "info",
+            f"skipped: needs {prog.devices} devices, have "
+            f"{jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={prog.devices})")]
+    problems = check_budget(prog.make(), prog.budget(), prog.devices)
+    if problems:
+        return [Finding("collective-budget", prog.name, "error", p)
+                for p in problems]
+    return [Finding("collective-budget", prog.name, "info",
+                    "HLO collectives match the analytic budget exactly")]
+
+
+@register_rule(
+    "donation",
+    "declared donate_argnums match the buffer-donation policy; donating "
+    "compiles carry input_output_alias")
+def _rule_donation(prog: Program) -> list:
+    if prog.kind != "donation":
+        return []
+    findings: list = []
+    declared = tuple(prog.declared_donate()) if prog.declared_donate else ()
+    if prog.expected_donate is not None:
+        expected = tuple(prog.expected_donate())
+        if declared != expected:
+            findings.append(Finding(
+                "donation", prog.name, "error",
+                f"declares donate_argnums={declared}, policy expects "
+                f"{expected}",
+                data={"declared": list(declared),
+                      "expected": list(expected)}))
+    if prog.make is not None and prog.expect_alias is not None:
+        aliases = input_output_aliases_from_hlo(prog.make())
+        if prog.expect_alias and not aliases:
+            findings.append(Finding(
+                "donation", prog.name, "error",
+                "donating program compiled WITHOUT input_output_alias — "
+                "the donation is silently dropped"))
+        elif not prog.expect_alias and aliases:
+            findings.append(Finding(
+                "donation", prog.name, "error",
+                f"unexpected input_output_alias entries: {aliases}"))
+    if not findings:
+        findings.append(Finding("donation", prog.name, "info",
+                                f"donation contract holds ({declared})"))
+    return findings
+
+
+@register_rule(
+    "retrace-guard",
+    "a pre-warmed sweep recompiles at most its budget — static padded "
+    "shapes and scheduled codec-tier changes only")
+def _rule_retrace_guard(prog: Program) -> list:
+    if prog.kind != "retrace" or prog.sweep is None:
+        return []
+    # warm: eager op-by-op dispatch compiles populate the process caches.
+    # A sweep may return a callable hot loop — then only the loop (steps/
+    # answers) is measured and per-sweep setup (trainer/engine builds with
+    # sweep-unique shapes) stays outside the counted window.
+    hot = prog.sweep()
+    if callable(hot):
+        hot()
+        hot = prog.sweep()
+        with count_compiles() as box:
+            hot()
+    else:
+        with count_compiles() as box:
+            prog.sweep()
+    if box.count > prog.retrace_budget:
+        return [Finding(
+            "retrace-guard", prog.name, "error",
+            f"{box.count} backend compiles in a warmed sweep, budget "
+            f"{prog.retrace_budget} — a shape- or weak-type-dependent "
+            "retrace crept into this entry point",
+            data={"compiles": box.count, "budget": prog.retrace_budget})]
+    return [Finding(
+        "retrace-guard", prog.name, "info",
+        f"{box.count} compiles <= budget {prog.retrace_budget}",
+        data={"compiles": box.count, "budget": prog.retrace_budget})]

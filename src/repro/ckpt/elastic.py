@@ -22,7 +22,7 @@ from repro.gnn.fullbatch import FullBatchTrainer
 from repro.gnn.models import GNNSpec
 
 
-def reshard_tree(tree: Any, shardings: Any) -> Any:
+def reshard_tree(tree: Any, shardings: Any) -> Any:  # lint: keep — LM-build hook
     """Re-place every leaf for a new mesh (LM elastic restart)."""
     return jax.tree.map(
         lambda leaf, sh: jax.device_put(np.asarray(jax.device_get(leaf)), sh),

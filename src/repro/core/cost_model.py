@@ -27,12 +27,28 @@ from repro.gnn.models import GNNSpec
 __all__ = [
     "ClusterSpec",
     "PAPER_CLUSTER",
+    "collective_budget",
     "fullbatch_epoch",
     "minibatch_step",
     "overlapped_step_time",
     "ring_bytes_per_round",
     "serve_request",
 ]
+
+
+def collective_budget(book, d: int, mode: str, codec=None,
+                      layer: int = 0) -> dict:
+    """Predicted compiled-HLO collective budget of one aggregate — the
+    hook the analysis subsystem's collective-budget rule prices programs
+    with. Canonical implementation sits next to the byte formulas in
+    `gnn.sync`; re-exported here so model-side consumers get every
+    analytic communication quantity from one module.
+
+    Returns {hlo_kind: {"count": (lo, hi), "cluster_bytes": int}}.
+    """
+    from repro.gnn.sync import collective_budget as _impl
+
+    return _impl(book, d, mode, codec=codec, layer=layer)
 
 
 @dataclasses.dataclass(frozen=True)

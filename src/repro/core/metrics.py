@@ -22,7 +22,6 @@ __all__ = [
     "edge_partition_metrics",
     "vertex_partition_metrics",
     "replication_factor",
-    "edge_cut_ratio",
 ]
 
 
@@ -107,11 +106,6 @@ def edge_partition_metrics(graph: Graph, edge_assignment: np.ndarray, k: int) ->
         vertices_per_partition=cover,
         edges_per_partition=edges_per,
     )
-
-
-def edge_cut_ratio(graph: Graph, vertex_assignment: np.ndarray) -> float:
-    cut = vertex_assignment[graph.src] != vertex_assignment[graph.dst]
-    return float(cut.sum() / max(graph.num_edges, 1))
 
 
 def vertex_partition_metrics(

@@ -41,7 +41,7 @@ from repro.gnn.minibatch import MiniBatchTrainer
 from repro.gnn.sampling import PAPER_FANOUTS
 
 # Paper Table 2 grid.
-PAPER_GRID = {
+PAPER_GRID = {  # lint: keep — documents the paper's model-size sweep
     "hidden_dim": (16, 64, 512),
     "feature_size": (16, 64, 512),
     "num_layers": (2, 3, 4),
@@ -131,10 +131,6 @@ class StudyCache:
 
 
 _GLOBAL_CACHE = StudyCache()
-
-
-def get_cache() -> StudyCache:
-    return _GLOBAL_CACHE
 
 
 def _json_default(o):

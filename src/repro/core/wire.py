@@ -66,6 +66,7 @@ __all__ = [
     "codec_grad_reduce",
     "ef_init",
     "make_codec",
+    "narrow_wire_dtypes",
     "roundtrip",
 ]
 
@@ -94,6 +95,8 @@ class Codec(Protocol):
 
     def wire_bytes(self, shape, dtype=np.float32) -> int: ...
 
+    def wire_dtype(self, layer: int = 0): ...
+
     def ratio(self, layer: int = 0) -> float: ...
 
 
@@ -119,6 +122,9 @@ class Fp32Codec:
         n = _nelems(shape)
         return n * np.dtype(dtype).itemsize if n else 0
 
+    def wire_dtype(self, layer: int = 0):
+        return jnp.float32
+
     def ratio(self, layer: int = 0) -> float:
         return 1.0
 
@@ -143,6 +149,9 @@ class Bf16Codec:
     def wire_bytes(self, shape, dtype=np.float32) -> int:
         n = _nelems(shape)
         return n * 2 if n else 0
+
+    def wire_dtype(self, layer: int = 0):
+        return jnp.bfloat16
 
     def ratio(self, layer: int = 0) -> float:
         return 0.5
@@ -181,6 +190,9 @@ class Int8EFCodec:
     def wire_bytes(self, shape, dtype=np.float32) -> int:
         n = _nelems(shape)
         return n + self.meta_bytes if n else 0
+
+    def wire_dtype(self, layer: int = 0):
+        return jnp.int8
 
     def ratio(self, layer: int = 0) -> float:
         return 0.25
@@ -234,6 +246,9 @@ class VariableRatioCodec:
     def wire_bytes(self, shape, dtype=np.float32, *, layer: int = 0) -> int:
         return self._sub(layer).wire_bytes(shape, dtype)
 
+    def wire_dtype(self, layer: int = 0):
+        return self._sub(layer).wire_dtype()
+
     def ratio(self, layer: int = 0) -> float:
         return self._sub(layer).ratio()
 
@@ -267,6 +282,27 @@ def roundtrip(codec: Codec, x, *, layer: int = 0):
     """decode(encode(x)) — the locally-observable effect of the wire."""
     payload, meta = codec.encode(x, layer=layer)
     return codec.decode(payload, meta)
+
+
+def narrow_wire_dtypes(codec: "Optional[str | Codec]",
+                       max_layers: int = 4) -> frozenset:
+    """Dtype NAMES this codec may narrow f32 payloads to on the wire.
+
+    The dtype-policy rule (repro.analysis) compares the narrowing
+    `convert_element_type`s it finds in a traced program against this set:
+    the fp32 codec returns an EMPTY set (any narrowing convert on an
+    fp32-default path is a violation), int8 returns {"int8"}, and the
+    variable-ratio codec returns the union over its per-layer schedule at
+    its current epoch — exactly where `core/wire.py` says the trace may
+    narrow, and nowhere else.
+    """
+    codec = as_codec(codec)
+    dts = set()
+    for layer in range(max_layers):
+        dt = np.dtype(codec.wire_dtype(layer=layer))
+        if dt.itemsize < 4:
+            dts.add(dt.name)
+    return frozenset(dts)
 
 
 # ---------------------------------------------------------------------------

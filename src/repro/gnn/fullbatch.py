@@ -62,6 +62,22 @@ from repro.optim import adam_init, adam_update
 AXIS = "parts"
 
 
+def step_donate_argnums(lossless: bool) -> tuple:
+    """Donated argnums the jitted full-batch train step declares.
+
+    The lossy (error-feedback) step donates opt_state and the EF carry —
+    args 1 and 3 of `step(params, opt_state, blocks, ef)` — so the update
+    happens in place; the lossless step keeps the historical undonated
+    graph. XLA:CPU cannot alias donated buffers (it warns per compile), so
+    donation only engages off-CPU — the documented whitelist in the
+    analysis donation rule, which otherwise requires every declared donated
+    arg to appear in the executable's `input_output_alias` table.
+    """
+    if lossless or jax.default_backend() == "cpu":
+        return ()
+    return (1, 3)
+
+
 # ---------------------------------------------------------------------------
 # Stage 1: partition layout
 # ---------------------------------------------------------------------------
@@ -286,8 +302,7 @@ class FullBatchTrainer:
             )
             return losses, new_params, new_state, new_ef
 
-        donate = () if jax.default_backend() == "cpu" else (1, 3)
-        return jax.jit(step, donate_argnums=donate)
+        return jax.jit(step, donate_argnums=step_donate_argnums(False))
 
     @functools.cached_property
     def _forward(self):

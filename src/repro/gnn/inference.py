@@ -105,25 +105,31 @@ class LayerwiseInference:
                    sync_mode=sync_mode)
 
     # ------------------------------------------------------------------ jit
+    def _per_device_layer(self, li: int):
+        """Per-device layer function (p, x, blk) -> states — the unit both
+        `_layer_steps` jits and `layer_jaxprs` traces for analysis."""
+        spec, book, sync_mode = self.spec, self.book, self.sync_mode
+        layer_fn = models._LAYERS[spec.model]
+        final = li == spec.num_layers - 1
+
+        def per_device(p, x, blk: Block):
+            mode = "local" if book.k == 1 else sync_mode
+            sync = make_sync(mode, blk, book.num_vertices, AXIS)
+            h = layer_fn(p, x, blk, sync, final=final,
+                         backend=spec.agg_backend)
+            # dummy row must stay zero: it is a scatter sink for padding
+            return h.at[-1].set(0.0)
+
+        return per_device
+
     @functools.cached_property
     def _layer_steps(self) -> list:
         """One jitted (params_l, states, blocks) -> states function per
         layer. Compiled lazily on first use; static across runs."""
-        spec, book, sync_mode = self.spec, self.book, self.sync_mode
-        layer_fn = models._LAYERS[spec.model]
-        n_layers = spec.num_layers
+        book = self.book
 
         def make(li: int):
-            final = li == n_layers - 1
-
-            def per_device(p, x, blk: Block):
-                mode = "local" if book.k == 1 else sync_mode
-                sync = make_sync(mode, blk, book.num_vertices, AXIS)
-                h = layer_fn(p, x, blk, sync, final=final,
-                             backend=spec.agg_backend)
-                # dummy row must stay zero: it is a scatter sink for padding
-                return h.at[-1].set(0.0)
-
+            per_device = self._per_device_layer(li)
             if book.k == 1:
                 def single(p, states, blocks):
                     blk = jax.tree.map(lambda a: a[0], blocks)
@@ -132,7 +138,30 @@ class LayerwiseInference:
             return jax.jit(jax.vmap(per_device, in_axes=(None, 0, 0),
                                     axis_name=AXIS))
 
-        return [make(li) for li in range(n_layers)]
+        return [make(li) for li in range(self.spec.num_layers)]
+
+    def layer_jaxprs(self) -> list:
+        """Traced per-layer jaxprs (one ClosedJaxpr per layer) — what the
+        analysis rules (no-scatter, dtype-policy) walk for this entry
+        point. Trace only: nothing compiles, nothing runs."""
+        n_rows = int(self.blocks.x.shape[-2])
+        jaxprs = []
+        for li in range(self.spec.num_layers):
+            per_device = self._per_device_layer(li)
+            din = self.spec.dims()[li][0]
+            if self.book.k == 1:
+                blk0 = jax.tree.map(lambda a: a[0], self.blocks)
+                jaxprs.append(jax.make_jaxpr(per_device)(
+                    self.params["layers"][li],
+                    jnp.zeros((n_rows, din), jnp.float32), blk0))
+            else:
+                jaxprs.append(jax.make_jaxpr(
+                    jax.vmap(per_device, in_axes=(None, 0, 0),
+                             axis_name=AXIS))(
+                    self.params["layers"][li],
+                    jnp.zeros((self.book.k, n_rows, din), jnp.float32),
+                    self.blocks))
+        return jaxprs
 
     # ------------------------------------------------------------------ api
     def run(self) -> list:

@@ -84,6 +84,20 @@ from repro.gnn.sampling import PAPER_FANOUTS, SamplePlan
 AXIS = "workers"
 
 
+def step_donate_argnums(lossless: bool) -> tuple:
+    """Donated argnums the jitted mini-batch train step declares.
+
+    Lossless: params + opt_state (args 0, 1) — the in-place update the
+    module docstring describes. Lossy: opt_state + the EF carry (args 1, 3
+    of `step(params, opt_state, stacked, ef)`). XLA:CPU cannot alias
+    donated buffers (warns per compile), so donation only engages off-CPU
+    — the documented whitelist in the analysis donation rule.
+    """
+    if jax.default_backend() == "cpu":
+        return ()
+    return (0, 1) if lossless else (1, 3)
+
+
 # ---------------------------------------------------------------------------
 # Device-side mini-batch model (directed MFG layers + self connection).
 # `lay` = dict(esrc, edst, emask, deg, agg_order, agg_ldst); n_dst is static
@@ -367,11 +381,8 @@ class MiniBatchTrainer:
         codec = as_codec(self.codec)
 
         # donate params/opt_state so the device step updates them in place —
-        # the trainer never reads the old buffers again. CPU's jit cannot
-        # donate (XLA:CPU aliasing is unsupported and warns per compile), so
-        # the knob only engages on accelerator backends.
-        on_cpu = jax.default_backend() == "cpu"
-
+        # the trainer never reads the old buffers again (declaration +
+        # CPU whitelist live in step_donate_argnums).
         if codec.lossless:
             # historical step graph, untouched (bitwise-identical default)
             def loss_of(params, stacked):
@@ -386,7 +397,7 @@ class MiniBatchTrainer:
                 new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
                 return loss, new_p, new_s
 
-            return jax.jit(step, donate_argnums=() if on_cpu else (0, 1))
+            return jax.jit(step, donate_argnums=step_donate_argnums(True))
 
         # lossy codec: per-worker grads completed by the error-feedback
         # compressed pmean; the EF residual rides along as a [k, ...] carry
@@ -404,7 +415,7 @@ class MiniBatchTrainer:
             new_p, new_s = adam_update(grads, opt_state, params, lr=lr)
             return jnp.mean(losses), new_p, new_s, new_ef
 
-        return jax.jit(step, donate_argnums=() if on_cpu else (1, 3))
+        return jax.jit(step, donate_argnums=step_donate_argnums(False))
 
     def _init_ef(self):
         """Per-worker zero EF residuals, stacked [k, ...]."""

@@ -492,6 +492,72 @@ def ring_bytes_per_round(book: BlockRowBook, d: int) -> int:
     return sync_bytes_per_round(book, d, "ring")
 
 
+def collective_budget(book, d: int, mode: str, codec=None,
+                      layer: int = 0) -> dict:
+    """Predicted compiled-HLO collective budget of ONE complete aggregate.
+
+    The analysis subsystem's collective-budget rule compiles one aggregate
+    per (sync_mode, codec) cell under shard_map and holds the HLO to this
+    prediction — per collective KIND (the HLO op name), an exact/ranged op
+    count and the exact cluster-wide payload bytes under the parser's
+    output-shape convention (repro.analysis.hlo):
+
+      halo   2 all_to_alls (reduce+broadcast pair); each op's per-device
+             output is the [k, B, d] bucket buffer in the codec's wire
+             dtype. Lossy codecs with scale meta gather sender scales
+             separately: +2 all-gathers of [k] f32.
+      ring   k−1 ppermute stages; payload AND meta rotate via
+             collective-permute, so the kind total equals
+             `sync_wire_bytes_per_round` exactly. Codecs with meta may
+             lower the scale as a separate permute per stage, so the op
+             count lands in [k−1, 2(k−1)].
+      dense  1 all-reduce of the global [V+1, d] buffer. DenseSync
+             quantises then psums the DEQUANTISED view, so the wire stays
+             f32 for every codec; the HLO output-shape convention counts
+             the reduce once (the analytic formula's ring-allreduce 2x is
+             a transport model, not an op count).
+
+    Returns {kind: {"count": (lo, hi), "cluster_bytes": int}}.
+    """
+    codec = as_codec(codec)
+    elem = int(np.dtype(codec.wire_dtype(layer=layer)).itemsize)
+    k = book.k
+
+    def wb(shape):
+        try:
+            return codec.wire_bytes(shape, layer=layer)
+        except TypeError:
+            return codec.wire_bytes(shape)
+
+    if mode == "halo":
+        b = book.bucket
+        budget = {"all-to-all": {
+            "count": (2, 2),
+            "cluster_bytes": 2 * k * k * b * d * elem,
+        }}
+        meta = wb((k, b, d)) - k * b * d * elem  # per-tensor scale bytes
+        if meta > 0:
+            # each exchange all_gathers the k sender scales ([k] f32)
+            budget["all-gather"] = {"count": (2, 2),
+                                    "cluster_bytes": 2 * k * k * meta}
+        return budget
+    if mode == "ring":
+        if not isinstance(book, BlockRowBook):
+            raise TypeError("ring budget needs a BlockRowBook")
+        has_meta = wb((book.v_block + 1, d)) > (book.v_block + 1) * d * elem
+        return {"collective-permute": {
+            "count": (k - 1, 2 * (k - 1)) if has_meta else (k - 1, k - 1),
+            "cluster_bytes": sync_wire_bytes_per_round(
+                book, d, "ring", codec, layer=layer),
+        }}
+    if mode == "dense":
+        return {"all-reduce": {
+            "count": (1, 1),
+            "cluster_bytes": k * (book.num_vertices + 1) * d * 4,
+        }}
+    raise ValueError(f"no collective budget for sync mode {mode!r}")
+
+
 def sync_wire_bytes_per_round(book, d: int, mode: str, codec=None,
                               layer: int = 0) -> int:
     """Codec-aware twin of `sync_bytes_per_round`: bytes that actually cross

@@ -98,6 +98,31 @@ def segment_spmm(
 
 AGG_BACKENDS = ("scatter", "tiled", "pallas")
 
+# The data-dependent scatter primitives the no-scatter rule hunts for in
+# traced programs (repro.analysis). Plain "scatter" (static-index
+# `at[].set`, e.g. zeroing the dummy row) is deliberately NOT listed: its
+# indices are compile-time constants, so it lowers to a cheap in-place
+# update, not the O(E) data-dependent scatter the tiled backends exist to
+# eliminate.
+SCATTER_PRIMITIVES = ("scatter-add", "scatter-max")
+
+
+def scatter_free_traced(backend: str) -> bool:
+    """Whether `aggregate(backend=...)` traces WITHOUT data-dependent
+    scatter primitives on this host.
+
+    "pallas" always forces the kernel (interpreted off-TPU), so its trace
+    is scatter-free everywhere. "tiled" lowers to the same kernel on TPU
+    but falls back to the jnp scatter ORACLE off-TPU (numerics over speed
+    on hosts with no tiled advantage) — so off-TPU its trace legitimately
+    contains scatter-add/scatter-max. "scatter" is the oracle by
+    definition. The analysis no-scatter rule derives each program's
+    expectation from this single predicate.
+    """
+    if backend == "pallas":
+        return True
+    return backend == "tiled" and _on_tpu()
+
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def _tiled_aggregate(num_rows, tile_v, block_e, use_pallas, interpret,

@@ -1,0 +1,142 @@
+"""gnn_lint: the distributed-invariant static-analysis gate.
+
+Builds one representative program per (entry point x model x aggregation
+backend x sync strategy x wire codec) cell — full-batch and mini-batch
+training steps, the layer-wise inference pass and the online serving
+forward — and runs every registered rule over their traced jaxprs and
+compiled HLO. Run from the repo root:
+
+    PYTHONPATH=src python -m repro.launch.gnn_lint --smoke \
+        --out-json gnn_lint_report.json
+
+Exit code 0 = no error-level findings; 1 = at least one violation.
+
+The JSON report (schema "gnn-lint-report/v1"):
+
+    {
+      "schema":   "gnn-lint-report/v1",
+      "programs": [name, ...],            # every program analyzed
+      "rules":    [name, ...],            # every rule run
+      "counts":   {"error": n, "warn": n, "info": n},
+      "exit_code": 0 | 1,
+      "elapsed_s": float,
+      "findings": [
+        {"rule": str, "program": str,
+         "level": "error" | "warn" | "info",
+         "message": str, "data": {...}},  # data is rule-specific detail
+        ...
+      ]
+    }
+"""
+
+# XLA device count is fixed at backend init: force the host devices the
+# compiled-HLO programs shard over BEFORE anything imports jax.
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="gnn_lint",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    p.add_argument("--smoke", action="store_true",
+                   help="run the full smoke grid (same as --grid smoke; "
+                        "the CI gate)")
+    p.add_argument("--grid", choices=("tiny", "smoke"), default=None,
+                   help="program grid: 'tiny' is a seconds-fast "
+                        "cross-section (trace-only), 'smoke' is the full "
+                        "gate incl. compiled-HLO budgets and retrace "
+                        "sweeps (default: tiny)")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule subset (default: all); "
+                        "known rules are listed by --list-rules")
+    p.add_argument("--out-json", default=None, metavar="PATH",
+                   help="write the JSON report here ('-' for stdout)")
+    p.add_argument("--inject-violation", default=None, metavar="RULE",
+                   help="append a program deliberately violating RULE — "
+                        "proves the gate exits non-zero")
+    p.add_argument("--deadcode", action="store_true",
+                   help="also run the advisory dead-export sweep "
+                        "(warn-level findings; never affects exit code)")
+    p.add_argument("--list-programs", action="store_true",
+                   help="print the grid's program names and exit")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print registered rules and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    grid = args.grid or ("smoke" if args.smoke else "tiny")
+
+    from repro.analysis import (
+        RULES, Finding, build_programs, run_rules, violation_program,
+    )
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name:20s} {RULES[name].doc}")
+        return 0
+
+    programs = build_programs(grid)
+    if args.inject_violation:
+        programs.append(violation_program(args.inject_violation))
+    if args.list_programs:
+        for prog in programs:
+            print(f"{prog.kind:10s} {prog.name}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        unknown = sorted(set(rules) - set(RULES))
+        if unknown:
+            print(f"unknown rules: {unknown}; known: {sorted(RULES)}",
+                  file=sys.stderr)
+            return 2
+
+    report = run_rules(programs, rules)
+
+    if args.deadcode:
+        from repro.analysis.deadcode import dead_exports
+
+        for name, files in dead_exports(os.getcwd()):
+            report.findings.append(Finding(
+                rule="dead-code", program=files[0], level="warn",
+                message=f"public export {name!r} is referenced nowhere "
+                        "outside its definition",
+                data={"symbol": name, "defined_in": files}))
+        report.rules_run.append("dead-code")
+
+    payload = json.dumps(report.to_dict(), indent=2)
+    if args.out_json == "-":
+        print(payload)
+    elif args.out_json:
+        with open(args.out_json, "w") as fh:
+            fh.write(payload + "\n")
+
+    by_level = {"error": [], "warn": [], "info": []}
+    for f in report.findings:
+        by_level.setdefault(f.level, []).append(f)
+    print(f"gnn_lint: {len(report.programs_run)} programs x "
+          f"{len(report.rules_run)} rules in {report.elapsed_s:.1f}s — "
+          f"{len(by_level['error'])} error(s), "
+          f"{len(by_level['warn'])} warning(s)")
+    for f in by_level["error"] + by_level["warn"]:
+        print(f"  [{f.level}] {f.rule} :: {f.program}: {f.message}")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

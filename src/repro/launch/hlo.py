@@ -1,59 +1,14 @@
-"""Compiled-HLO text analysis helpers (no repro.dist dependency).
+"""Compat shim: the HLO parser moved to `repro.analysis.hlo`.
 
-`collective_bytes_from_hlo` is used by the dry-run harness to cross-check
-analytic communication models against what XLA actually emitted, and by the
-GNN tests to pin `sync_bytes_per_round` to the compiled halo exchange.
+The dry-run harness and older tests import `collective_bytes_from_hlo`
+from here; the canonical implementation (plus the richer `analyze_hlo`)
+now lives in the analysis subsystem so the lint rules and the dry-run
+cross-check share one parser.
 """
 
-from __future__ import annotations
-
-import re
-
-_COLLECTIVE_RE = re.compile(
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?(?:\.\d+)?\s*\(",
+from repro.analysis.hlo import (  # noqa: F401 (re-exports)
+    analyze_hlo,
+    collective_bytes_from_hlo,
 )
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-
-def collective_bytes_from_hlo(hlo_text: str) -> dict:
-    """Sum output-shape bytes of every collective op in the compiled HLO.
-
-    Uses the *output* shape of each collective instruction (for all-gather
-    that is the gathered size; for reduce-scatter the scattered size; a
-    reasonable, consistent proxy for payload per device).
-    """
-    per_kind: dict[str, int] = {}
-    count: dict[str, int] = {}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        if "=" not in line:
-            continue
-        rhs = line.split("=", 1)[1]
-        m = _COLLECTIVE_RE.search(rhs)
-        if not m:
-            continue
-        kind = m.group(1)
-        # output shape(s) sit between '=' and the op name, e.g.
-        #   %ar = (f32[1024], f32[64]) all-reduce(...)
-        shape_region = rhs[: m.start()]
-        total = 0
-        for dt, dims in _SHAPE_RE.findall(shape_region):
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            for tok in dims.split(","):
-                if tok:
-                    n *= int(tok)
-            total += n * _DTYPE_BYTES[dt]
-        per_kind[kind] = per_kind.get(kind, 0) + total
-        count[kind] = count.get(kind, 0) + 1
-    return {"bytes_per_kind": per_kind, "count_per_kind": count,
-            "total_bytes": int(sum(per_kind.values()))}
+__all__ = ["analyze_hlo", "collective_bytes_from_hlo"]

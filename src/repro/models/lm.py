@@ -64,7 +64,7 @@ _MOE_DP_AXES: tuple = ()
 _REMAT_POLICY: Optional[str] = None
 
 
-def set_remat_policy(name: Optional[str]) -> None:
+def set_remat_policy(name: Optional[str]) -> None:  # lint: keep — dist-build hook
     global _REMAT_POLICY
     _REMAT_POLICY = name
 
@@ -74,7 +74,7 @@ def set_remat_policy(name: Optional[str]) -> None:
 _MOE_DISPATCH_DTYPE: Optional[Any] = None
 
 
-def set_moe_dispatch_dtype(dtype) -> None:
+def set_moe_dispatch_dtype(dtype) -> None:  # lint: keep — dist-build hook
     global _MOE_DISPATCH_DTYPE
     _MOE_DISPATCH_DTYPE = dtype
 

@@ -87,7 +87,10 @@ class ServeEngine:
     def _sizes(self) -> tuple:
         return tuple(p.n_dst for p in self.plan.layers)
 
-    def _device_batch(self, batch: SampledBatch, x: np.ndarray) -> dict:
+    def device_batch(self, batch: SampledBatch, x: np.ndarray) -> dict:
+        """Stage one padded MFG + input rows onto the device — the pytree the
+        jitted step consumes. Public so the analysis subsystem can trace the
+        exact serving forward (`mfg_forward` over this structure)."""
         layers = []
         for lay in batch.layers:
             d = {
@@ -101,6 +104,9 @@ class ServeEngine:
                 d["agg_ldst"] = jnp.asarray(lay.agg_ldst)
             layers.append(d)
         return {"x": jnp.asarray(x), "layers": layers}
+
+    # back-compat alias (pre-analysis name)
+    _device_batch = device_batch
 
     def answer(
         self, batch: SampledBatch

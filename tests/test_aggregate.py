@@ -273,36 +273,6 @@ def test_fullbatch_pallas_backend_smoke(or_graph, node_data, model):
 # ---------------------------------------------------------------------------
 
 
-def _eqn_primitive_names(jaxpr) -> set:
-    """All primitive names in a (Closed)Jaxpr, recursing into sub-jaxprs
-    (cond/scan/pjit/custom_vjp/pallas_call bodies)."""
-    import jax.core as core
-
-    names = set()
-
-    def subjaxprs(value):
-        if isinstance(value, core.ClosedJaxpr):
-            yield value.jaxpr
-        elif isinstance(value, core.Jaxpr):
-            yield value
-        elif isinstance(value, (tuple, list)):
-            for v in value:
-                yield from subjaxprs(v)
-        elif isinstance(value, dict):
-            for v in value.values():
-                yield from subjaxprs(v)
-
-    def walk(j):
-        for eqn in j.eqns:
-            names.add(eqn.primitive.name)
-            for v in eqn.params.values():
-                for sub in subjaxprs(v):
-                    walk(sub)
-
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return names
-
-
 def test_gat_forward_scatter_free_when_not_scatter(or_graph, node_data):
     """With agg_backend="pallas" the traced GAT forward contains NO
     data-dependent scatter-add/scatter-max — every O(E) edge reduction runs
@@ -310,9 +280,10 @@ def test_gat_forward_scatter_free_when_not_scatter(or_graph, node_data):
     legitimately falls back to the jnp scatter oracle (on TPU it lowers to
     the same kernel as "pallas"), and with k>1 the replica sync still
     scatters into its bucket-sized halo buffers (O(replicas), the network
-    path) — hence k=1/LocalSync here, which isolates the edge hot path."""
-    import jax.numpy as jnp
-
+    path) — hence k=1/LocalSync here, which isolates the edge hot path.
+    The walk + expectation live in `repro.analysis` (the gnn_lint
+    no-scatter rule); this test pins the rule to these exact traces."""
+    from repro.analysis import check_scatter
     from repro.gnn import models
     from repro.gnn.sync import LocalSync
 
@@ -326,21 +297,24 @@ def test_gat_forward_scatter_free_when_not_scatter(or_graph, node_data):
     jaxpr = jax.make_jaxpr(
         lambda params, x: models.forward(spec, params, x, blk, LocalSync())
     )(tr.params, blk.x)
-    names = _eqn_primitive_names(jaxpr)
-    assert "scatter-add" not in names and "scatter-max" not in names, names
+    assert check_scatter([jaxpr], expect_free=True) is None
 
     # the scatter oracle, traced the same way, DOES contain both — the
-    # assertion above is meaningful
+    # anchor direction (expect_free=False) holds, so the assertion above
+    # is meaningful
     spec_sc = dataclasses.replace(spec, agg_backend="scatter")
-    names_sc = _eqn_primitive_names(jax.make_jaxpr(
+    jaxpr_sc = jax.make_jaxpr(
         lambda params, x: models.forward(spec_sc, params, x, blk, LocalSync())
-    )(tr.params, blk.x))
-    assert "scatter-add" in names_sc and "scatter-max" in names_sc, names_sc
+    )(tr.params, blk.x)
+    assert check_scatter([jaxpr_sc], expect_free=False) is None
+    # and the walker misreports neither direction
+    assert check_scatter([jaxpr_sc], expect_free=True) is not None
 
 
 def test_minibatch_gat_forward_scatter_free_when_not_scatter(
         or_graph, node_data):
     """Same acceptance gate for the mini-batch GAT layer stack."""
+    from repro.analysis import check_scatter
     from repro.gnn.minibatch import minibatch_loss
 
     feats, labels, train = node_data
@@ -357,8 +331,7 @@ def test_minibatch_gat_forward_scatter_free_when_not_scatter(
     jaxpr = jax.make_jaxpr(
         lambda params: minibatch_loss(spec, params, batch0, sizes, axis=None)
     )(tr.params)
-    names = _eqn_primitive_names(jaxpr)
-    assert "scatter-add" not in names and "scatter-max" not in names, names
+    assert check_scatter([jaxpr], expect_free=True) is None
 
 
 @pytest.mark.parametrize("model", ["sage", "gat"])

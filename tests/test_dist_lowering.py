@@ -223,48 +223,33 @@ def test_ring_sync_bytes_match_compiled_hlo():
     """`ring_bytes_per_round` (k·(k−1)·(Vb+1)·d·4 cluster-wide) pinned
     against the collective-permute bytes XLA actually emitted: one ring
     aggregate compiles to EXACTLY k−1 permutes of the [Vb+1, d] payload
-    block per device (the last rotation is elided)."""
+    block per device (the last rotation is elided). Driven through the
+    gnn_lint collective-budget rule over the analysis program grid — the
+    exact byte equality is now the rule's budget prediction."""
     out = _run("""
-        import numpy as np, jax
-        from jax.sharding import PartitionSpec as P
+        import numpy as np
+        from repro.analysis import analyze_hlo, build_programs, run_rules
         from repro.core.graph import paper_graph
         from repro.core.partition_book import build_blockrow_book
-        from repro.gnn.sync import RingSync, build_ring_blocks, \\
-            ring_bytes_per_round
-        from repro.launch.hlo import collective_bytes_from_hlo
-        from repro.launch.mesh import make_mesh
+        from repro.gnn.sync import ring_bytes_per_round
 
-        g = paper_graph("OR", scale=0.01, seed=0)
         k, d = 4, 8
-        book = build_blockrow_book(g, k)
-        rng = np.random.default_rng(0)
-        feats = rng.normal(size=(g.num_vertices, d)).astype(np.float32)
-        labels = np.zeros(g.num_vertices, np.int32)
-        blocks = build_ring_blocks(book, feats, labels,
-                                   np.zeros(g.num_vertices, bool))
-        mesh = make_mesh((4,), ("parts",))
+        progs = [p for p in build_programs("smoke")
+                 if p.name == "hlo/ring-fp32"]
+        assert len(progs) == 1
+        report = run_rules(progs, ["collective-budget"])
+        assert report.exit_code == 0, [f.message for f in report.errors]
+        assert not any("skipped" in f.message for f in report.findings)
 
-        def per_device(blocks_local):
-            blk = jax.tree.map(lambda a: a[0], blocks_local)
-            sync = RingSync(axis="parts", k=k)
-            h = sync.edge_aggregate(blk, blk.x,
-                                    lambda s, dst, m: s * m[:, None])
-            return h[None]
-
-        shard_map = (jax.shard_map if hasattr(jax, "shard_map")
-                     else __import__("jax.experimental.shard_map",
-                                     fromlist=["shard_map"]).shard_map)
-        kw = ({"check_vma": False} if hasattr(jax, "shard_map")
-              else {"check_rep": False})
-        fn = shard_map(per_device, mesh=mesh, in_specs=(P("parts"),),
-                       out_specs=P("parts"), **kw)
-        hlo = jax.jit(fn).lower(blocks).compile().as_text()
-        coll = collective_bytes_from_hlo(hlo)
-        got = coll["bytes_per_kind"]["collective-permute"]
+        # the rule's budget IS the analytic pin, and the compiled HLO
+        # matches it exactly
+        res = analyze_hlo(progs[0].make())
+        got = res["bytes_per_kind"]["collective-permute"]
+        book = build_blockrow_book(paper_graph("OR", scale=0.01, seed=0), k)
         expect_cluster = ring_bytes_per_round(book, d)
-        print("cp_count", coll["count_per_kind"]["collective-permute"],
+        print("cp_count", res["count_per_kind"]["collective-permute"],
               "per_device", got, "cluster", expect_cluster)
-        assert coll["count_per_kind"]["collective-permute"] == k - 1
+        assert res["count_per_kind"]["collective-permute"] == k - 1
         assert got * k == expect_cluster, (got, k, expect_cluster)
     """, devices=4)
     assert "cp_count 3" in out
@@ -275,45 +260,27 @@ def test_ring_sync_int8_codec_shrinks_compiled_hlo():
     (+ one f32 scale per block): cluster permute bytes equal
     `sync_wire_bytes_per_round(..., codec="int8")` = k·(k−1)·((Vb+1)·d + 4)
     — a ~4x shrink vs the fp32 pin above. The payload and its scale may
-    lower as separate permutes, so the op count lands in [k−1, 2(k−1)]."""
+    lower as separate permutes, so the op count lands in [k−1, 2(k−1)].
+    Driven through the gnn_lint collective-budget rule."""
     out = _run("""
-        import numpy as np, jax
-        from jax.sharding import PartitionSpec as P
+        import numpy as np
+        from repro.analysis import analyze_hlo, build_programs, run_rules
         from repro.core.graph import paper_graph
         from repro.core.partition_book import build_blockrow_book
-        from repro.gnn.sync import RingSync, build_ring_blocks, \\
-            ring_bytes_per_round, sync_wire_bytes_per_round
-        from repro.launch.hlo import collective_bytes_from_hlo
-        from repro.launch.mesh import make_mesh
+        from repro.gnn.sync import ring_bytes_per_round, \\
+            sync_wire_bytes_per_round
 
-        g = paper_graph("OR", scale=0.01, seed=0)
         k, d = 4, 8
-        book = build_blockrow_book(g, k)
-        rng = np.random.default_rng(0)
-        feats = rng.normal(size=(g.num_vertices, d)).astype(np.float32)
-        labels = np.zeros(g.num_vertices, np.int32)
-        blocks = build_ring_blocks(book, feats, labels,
-                                   np.zeros(g.num_vertices, bool))
-        mesh = make_mesh((4,), ("parts",))
+        progs = [p for p in build_programs("smoke")
+                 if p.name == "hlo/ring-int8"]
+        report = run_rules(progs, ["collective-budget"])
+        assert report.exit_code == 0, [f.message for f in report.errors]
+        assert not any("skipped" in f.message for f in report.findings)
 
-        def per_device(blocks_local):
-            blk = jax.tree.map(lambda a: a[0], blocks_local)
-            sync = RingSync(axis="parts", k=k, codec="int8")
-            h = sync.edge_aggregate(blk, blk.x,
-                                    lambda s, dst, m: s * m[:, None])
-            return h[None]
-
-        shard_map = (jax.shard_map if hasattr(jax, "shard_map")
-                     else __import__("jax.experimental.shard_map",
-                                     fromlist=["shard_map"]).shard_map)
-        kw = ({"check_vma": False} if hasattr(jax, "shard_map")
-              else {"check_rep": False})
-        fn = shard_map(per_device, mesh=mesh, in_specs=(P("parts"),),
-                       out_specs=P("parts"), **kw)
-        hlo = jax.jit(fn).lower(blocks).compile().as_text()
-        coll = collective_bytes_from_hlo(hlo)
-        got = coll["bytes_per_kind"]["collective-permute"]
-        count = coll["count_per_kind"]["collective-permute"]
+        res = analyze_hlo(progs[0].make())
+        got = res["bytes_per_kind"]["collective-permute"]
+        count = res["count_per_kind"]["collective-permute"]
+        book = build_blockrow_book(paper_graph("OR", scale=0.01, seed=0), k)
         expect_wire = sync_wire_bytes_per_round(book, d, "ring",
                                                 codec="int8")
         fp32_cluster = ring_bytes_per_round(book, d)
@@ -330,46 +297,31 @@ def test_ring_sync_int8_codec_shrinks_compiled_hlo():
 def test_halo_sync_bytes_match_compiled_hlo():
     """`sync_bytes_per_round` (2*k^2*B*d*4 cluster-wide for halo) pinned
     against the all-to-all bytes XLA actually emitted: the compiled
-    per-device program moves 2*k*B*d*4 bytes per reduce+broadcast pair."""
+    per-device program moves 2*k*B*d*4 bytes per reduce+broadcast pair.
+    Driven through the gnn_lint collective-budget rule."""
     out = _run("""
-        import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P
-        from repro.core.graph import paper_graph
+        import numpy as np
+        from repro.analysis import analyze_hlo, build_programs, run_rules
         from repro.core.edge_partition import partition_edges
+        from repro.core.graph import paper_graph
         from repro.core.partition_book import build_edge_book
-        from repro.gnn.sync import HaloSync, build_blocks, sync_bytes_per_round
-        from repro.launch.hlo import collective_bytes_from_hlo
-        from repro.launch.mesh import make_mesh
+        from repro.gnn.sync import sync_bytes_per_round
 
-        g = paper_graph("OR", scale=0.01, seed=0)
         k, d = 4, 8
+        progs = [p for p in build_programs("smoke")
+                 if p.name == "hlo/halo-fp32"]
+        report = run_rules(progs, ["collective-budget"])
+        assert report.exit_code == 0, [f.message for f in report.errors]
+        assert not any("skipped" in f.message for f in report.findings)
+
+        res = analyze_hlo(progs[0].make())
+        got = res["bytes_per_kind"]["all-to-all"]
+        g = paper_graph("OR", scale=0.01, seed=0)
         book = build_edge_book(g, partition_edges(g, k, "hdrf", seed=1), k)
-        rng = np.random.default_rng(0)
-        feats = rng.normal(size=(g.num_vertices, d)).astype(np.float32)
-        labels = np.zeros(g.num_vertices, np.int32)
-        blocks = build_blocks(book, feats, labels, np.zeros(g.num_vertices, bool))
-        mesh = make_mesh((4,), ("parts",))
-
-        def per_device(blocks_local):
-            blk = jax.tree.map(lambda a: a[0], blocks_local)
-            sync = HaloSync(blk=blk, axis="parts")
-            h = sync.broadcast(sync.reduce_sum(blk.x))   # one reduce+broadcast
-            return jax.tree.map(lambda a: a[None], h)
-
-        shard_map = (jax.shard_map if hasattr(jax, "shard_map")
-                     else __import__("jax.experimental.shard_map",
-                                     fromlist=["shard_map"]).shard_map)
-        kw = ({"check_vma": False} if hasattr(jax, "shard_map")
-              else {"check_rep": False})
-        fn = shard_map(per_device, mesh=mesh, in_specs=(P("parts"),),
-                       out_specs=P("parts"), **kw)
-        hlo = jax.jit(fn).lower(blocks).compile().as_text()
-        coll = collective_bytes_from_hlo(hlo)
-        got = coll["bytes_per_kind"]["all-to-all"]
         expect_cluster = sync_bytes_per_round(book, d, "halo")
-        print("a2a_count", coll["count_per_kind"]["all-to-all"],
+        print("a2a_count", res["count_per_kind"]["all-to-all"],
               "per_device", got, "cluster", expect_cluster)
-        assert coll["count_per_kind"]["all-to-all"] == 2
+        assert res["count_per_kind"]["all-to-all"] == 2
         assert got * k == expect_cluster, (got, k, expect_cluster)
     """, devices=4)
     assert "a2a_count 2" in out
@@ -389,6 +341,8 @@ def test_dryrun_collective_parser():
     assert res["count_per_kind"]["all-reduce"] == 1
     assert res["bytes_per_kind"]["all-reduce"] == 1024 * 8 * 4
     assert res["count_per_kind"]["all-gather"] == 1
-    assert res["bytes_per_kind"]["all-gather"] == 64 * 2 + 32 * 2
+    # the -start tuple echoes its bf16[32] operand; only the gathered
+    # bf16[64] result is payload under the hardened parser
+    assert res["bytes_per_kind"]["all-gather"] == 64 * 2
     assert res["count_per_kind"]["all-to-all"] == 1
     assert "copy" not in res["count_per_kind"]

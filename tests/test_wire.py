@@ -84,6 +84,37 @@ def test_fp32_is_the_exact_identity(to_dev):
     assert c.ratio(0) == c.ratio(3) == 1.0
 
 
+def test_wire_dtype_policy_via_analysis(wg):
+    """`narrow_wire_dtypes` declares each codec's on-wire narrow dtypes and
+    the gnn_lint dtype-policy check holds traced train steps to exactly
+    those: the fp32 step contains NO narrowing convert anywhere in its
+    jaxpr, the int8 step narrows to s8 only — the jaxpr-level twin of the
+    bitwise-identity pins below."""
+    from repro.analysis import check_narrowing
+    from repro.core.wire import narrow_wire_dtypes
+    from repro.gnn.fullbatch import FullBatchTrainer
+
+    assert narrow_wire_dtypes("fp32") == frozenset()
+    assert narrow_wire_dtypes("bf16") == frozenset({"bfloat16"})
+    assert narrow_wire_dtypes("int8") == frozenset({"int8"})
+    assert narrow_wire_dtypes("variable")  # schedules are never identity
+    assert narrow_wire_dtypes("variable") <= {"int8", "bfloat16"}
+
+    g, feats, labels, train = wg
+    jaxprs = {}
+    for codec in ("fp32", "int8"):
+        tr = FullBatchTrainer.build(g, None, 4, _spec(), feats, labels,
+                                    train, sync_mode="ring", mode="sim",
+                                    seed=7, codec=codec)
+        loss, _ = tr._step_fns
+        jaxprs[codec] = jax.make_jaxpr(tr._wrap(loss))(tr.params, tr.blocks)
+    assert check_narrowing([jaxprs["fp32"]], "fp32") == []
+    assert check_narrowing([jaxprs["int8"]], "int8") == []
+    # the int8 trace genuinely narrows (f32 -> s8 on the wire), so the
+    # clean fp32 result above is not the walker being blind
+    assert check_narrowing([jaxprs["int8"]], "fp32")
+
+
 @pytest.mark.parametrize("to_dev", [False, True])
 def test_bf16_roundtrip_relative_bound(to_dev):
     x = np.random.default_rng(2).normal(size=(64, 9)).astype(np.float32)
