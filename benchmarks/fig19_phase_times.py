@@ -51,6 +51,7 @@ def measure_overlap(
     from repro.core.vertex_partition import partition_vertices
     from repro.gnn.minibatch import MiniBatchTrainer
     from repro.gnn.models import GNNSpec
+    from repro.obs.aggregate import phase_means
 
     g = paper_graph("OR", scale=scale, seed=0)
     rng = np.random.default_rng(0)
@@ -76,15 +77,17 @@ def measure_overlap(
         ms = [tr.train_step() for _ in range(steps)]
         wall = (time.perf_counter() - t0) / steps
         tr.close()
+        # one shared phase reduction (repro.obs.aggregate) — the same
+        # helper study.host_phase_means delegates to
+        pm = phase_means(ms)
         out[mode] = {
-            "sample": float(np.mean([m.sample_time_host for m in ms])),
-            "fetch": float(np.mean([m.fetch_time_host for m in ms])),
-            "transfer": float(np.mean([m.transfer_time_host for m in ms])),
-            "compute": float(np.mean([m.compute_time_host for m in ms])),
-            "step_wall": float(np.mean([m.step_wall_host for m in ms])),
+            "sample": pm["host_sample_time"],
+            "fetch": pm["host_fetch_time"],
+            "transfer": pm["host_transfer_time"],
+            "compute": pm["host_compute_time"],
+            "step_wall": pm["host_step_wall"],
             "wall": wall,
-            "overlap_efficiency": float(
-                np.mean([m.overlap_efficiency for m in ms])),
+            "overlap_efficiency": pm["overlap_efficiency"],
             "loss_last": ms[-1].loss,
         }
     out["speedup"] = out["serial"]["wall"] / out["pipelined"]["wall"]

@@ -65,6 +65,14 @@ def main() -> None:
                     "p99_ms": round(r["latency_p99"] * 1e3, 4),
                     "mean_ms": round(r["latency_mean"] * 1e3, 4),
                     "service_ms": round(r["service_mean"] * 1e3, 4),
+                    # p99 attribution: queueing vs compute (obs.aggregate
+                    # request_breakdown columns on the study row)
+                    "queue_wait_p99_ms": round(
+                        r.get("queue_wait_p99", 0.0) * 1e3, 4),
+                    "service_p99_ms": round(
+                        r.get("service_p99", 0.0) * 1e3, 4),
+                    "p99_queue_share": round(
+                        r.get("p99_queue_share", 0.0), 4),
                     "hit_rate": round(r["hit_rate"], 4),
                     "miss_bytes": r["miss_bytes"],
                     "qps_sustainable": round(r["qps_sustainable"], 1),
@@ -91,6 +99,14 @@ def main() -> None:
          f"cache_composes={cached['miss_bytes'] < uncached['miss_bytes']};"
          f"quality_beats_cache={cached['miss_bytes'] < rnd_cached['miss_bytes']};"
          f"hit_rate={cached['hit_rate']:.3f}")
+    # p99 attribution: under rising load the queue share of tail latency
+    # must grow (service time is load-independent in the simulator)
+    lo, hi = pick(best, "none", QPS[0]), pick(best, "none", QPS[-1])
+    emit("serving.p99_attribution", 0.0,
+         f"queue_share_lo={lo.get('p99_queue_share', 0.0):.3f};"
+         f"queue_share_hi={hi.get('p99_queue_share', 0.0):.3f};"
+         f"queueing_grows_with_load="
+         f"{hi.get('p99_queue_share', 0.0) >= lo.get('p99_queue_share', 0.0)}")
 
     if args.out_json:
         write_rows(rows, args.out_json)

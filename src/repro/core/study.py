@@ -39,6 +39,7 @@ from repro.core.vertex_partition import partition_vertices
 from repro.gnn.models import GNNSpec
 from repro.gnn.minibatch import MiniBatchTrainer
 from repro.gnn.sampling import PAPER_FANOUTS
+from repro.obs import aggregate as obs_aggregate
 
 # Paper Table 2 grid.
 PAPER_GRID = {  # lint: keep — documents the paper's model-size sweep
@@ -388,18 +389,10 @@ def minibatch_row(
     )
 
 
-def host_phase_means(metrics) -> dict:
-    """Mean MEASURED host/device phase wall times over a list of
-    `StepMetrics` — the `host_*` columns of a mini-batch row (this
-    container's clock, unlike the modeled paper-cluster `*_time` columns)."""
-    return {
-        "host_sample_time": float(np.mean([m.sample_time_host for m in metrics])),
-        "host_fetch_time": float(np.mean([m.fetch_time_host for m in metrics])),
-        "host_transfer_time": float(np.mean([m.transfer_time_host for m in metrics])),
-        "host_compute_time": float(np.mean([m.compute_time_host for m in metrics])),
-        "host_step_wall": float(np.mean([m.step_wall_host for m in metrics])),
-        "overlap_efficiency": float(np.mean([m.overlap_efficiency for m in metrics])),
-    }
+# the reduction itself lives in the observability layer now, shared with
+# benchmarks/fig19_phase_times.py and roofline.py --smoke; this name stays
+# as the study-side entry point
+host_phase_means = obs_aggregate.phase_means
 
 
 def minibatch_result_row(
@@ -532,6 +525,11 @@ def serve_result_row(
         "hit_rate": fetch.hit_rate,
         "miss_bytes": fetch.miss_bytes,
         "wire_bytes": fetch.wire_bytes,
+        # queue-wait vs service-time attribution from the request spans
+        # (queue span = enqueue→dispatch, service span = dispatch→done):
+        # lets fig_serving attribute a p99 to queueing vs compute
+        **obs_aggregate.request_breakdown(
+            report.latency, getattr(report, "queue_wait", None)),
     }
 
 

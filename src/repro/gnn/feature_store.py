@@ -48,6 +48,7 @@ defining property, not a bug.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -55,6 +56,7 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
 from repro.core.wire import Codec, as_codec
+from repro.obs.trace import get_tracer
 
 __all__ = [
     "CACHE_POLICIES",
@@ -295,6 +297,8 @@ class RowStore:
         state only, writes only to the freshly-allocated `out` block."""
         if self.rows is None:
             raise ValueError("accounting-only store (built without rows)")
+        tracer = get_tracer()
+        t0 = time.perf_counter()
         ids = np.asarray(ids, dtype=np.int64)
         local, hit, miss = self.split(worker, ids)
         out = np.empty((ids.shape[0], self.row_dim), dtype=self.rows.dtype)
@@ -303,14 +307,30 @@ class RowStore:
         out[hit] = self.cache_rows[worker, slot]
         codec = self._codec()
         miss_rows = self.rows[ids[miss]]                            # remote fetch
+        # MEASURED wire bytes: what the encoded representation actually
+        # occupies (fp32 ships the rows as-is). The reconciliation gate
+        # holds this against the Codec.wire_bytes formula in FetchStats.
+        wire_measured = miss_rows.nbytes
         if not codec.lossless and miss_rows.shape[0]:
             # the remote side ships the encoded representation; only the
             # decoded rows exist on this worker
             payload, meta = codec.encode(miss_rows)
+            wire_measured = payload.nbytes + (
+                0 if meta is None else np.asarray(meta).nbytes)
             miss_rows = np.asarray(codec.decode(payload, meta),
                                    dtype=self.rows.dtype)
         out[miss] = miss_rows
-        return out, self._stats_of(ids, local, hit, miss)
+        stats = self._stats_of(ids, local, hit, miss)
+        if tracer.enabled:
+            tracer.record_span("store.gather", t0, time.perf_counter(),
+                               cat="fetch",
+                               args={"worker": int(worker),
+                                     "ids": int(ids.shape[0]),
+                                     "miss": stats.num_remote_miss})
+            tracer.add("fetch.wire_bytes", wire_measured)
+            tracer.add("fetch.miss_bytes", stats.miss_bytes)
+            tracer.gauge("cache.hit_rate", stats.hit_rate)
+        return out, stats
 
 
 class FeatureStore(RowStore):

@@ -57,6 +57,7 @@ from repro.gnn.sync import (
     sync_bytes_per_round,
     sync_wire_bytes_per_round,
 )
+from repro.obs.trace import get_tracer
 from repro.optim import adam_init, adam_update
 
 AXIS = "parts"
@@ -312,17 +313,20 @@ class FullBatchTrainer:
         )
 
     def train_step(self) -> float:
-        if as_codec(self.codec).lossless:
-            loss, self.params, self.opt_state = self._train_step(
-                self.params, self.opt_state, self.blocks
-            )
+        with get_tracer().span("fullbatch.step", cat="step",
+                               args={"sync": self.sync_mode}):
+            if as_codec(self.codec).lossless:
+                loss, self.params, self.opt_state = self._train_step(
+                    self.params, self.opt_state, self.blocks
+                )
+                return float(loss)
+            if self.ef_state is None:
+                self.ef_state = self._init_ef()
+            loss, self.params, self.opt_state, self.ef_state = \
+                self._train_step(
+                    self.params, self.opt_state, self.blocks, self.ef_state
+                )
             return float(loss)
-        if self.ef_state is None:
-            self.ef_state = self._init_ef()
-        loss, self.params, self.opt_state, self.ef_state = self._train_step(
-            self.params, self.opt_state, self.blocks, self.ef_state
-        )
-        return float(loss)
 
     def set_epoch(self, epoch: int) -> None:
         """Advance epoch-scheduled codecs (VariableRatioCodec). Re-jits the
@@ -354,14 +358,16 @@ class FullBatchTrainer:
 
         Backward of a reduce+broadcast pair is another broadcast+reduce pair;
         backward of a ppermute ring is the reverse ring — either way 2x the
-        forward volume. GAT syncs 3 aggregates/layer, SAGE/GCN 1.
+        forward volume. GAT syncs 3 aggregates/layer, SAGE/GCN 1; each
+        aggregate is priced at its true payload width
+        (`GNNSpec.aggregate_dims`), so the total matches the collectives a
+        traced step actually records.
         """
-        syncs_per_layer = 3 if self.spec.model == "gat" else 1
-        dims = [d_out for _, d_out in self.spec.dims()]
         total = 0
-        for d_out in dims:
-            per = sync_bytes_per_round(self.book, d_out, self.sync_mode)
-            total += syncs_per_layer * per * 2  # fwd + bwd
+        for layer_dims in self.spec.aggregate_dims(self.sync_mode):
+            for d in layer_dims:
+                per = sync_bytes_per_round(self.book, d, self.sync_mode)
+                total += per * 2  # fwd + bwd
         # gradient all-reduce of the (replicated) model parameters
         n_params = sum(
             int(np.prod(p.shape)) for p in jax.tree.leaves(self.params)
@@ -374,13 +380,14 @@ class FullBatchTrainer:
         cross the network once payloads are encoded (== the logical number
         under the default fp32 codec)."""
         codec = as_codec(self.codec)
-        syncs_per_layer = 3 if self.spec.model == "gat" else 1
         total = 0
-        for li, (_, d_out) in enumerate(self.spec.dims()):
-            ordinal = li * syncs_per_layer
-            per = sync_wire_bytes_per_round(
-                self.book, d_out, self.sync_mode, codec, layer=ordinal)
-            total += syncs_per_layer * per * 2  # fwd + bwd
+        ordinal = 0
+        for layer_dims in self.spec.aggregate_dims(self.sync_mode):
+            for d in layer_dims:
+                per = sync_wire_bytes_per_round(
+                    self.book, d, self.sync_mode, codec, layer=ordinal)
+                total += per * 2  # fwd + bwd
+                ordinal += 1
         # gradient all-reduce, priced per leaf (per-tensor codec meta)
         leaf_bytes = sum(
             codec.wire_bytes(p.shape) for p in jax.tree.leaves(self.params)

@@ -46,6 +46,7 @@ from repro.gnn import models
 from repro.gnn.feature_store import RowStore, select_cache_vertices
 from repro.gnn.models import GNNSpec
 from repro.gnn.sync import Block, build_blocks, make_sync, sync_bytes_per_round
+from repro.obs.trace import get_tracer
 
 AXIS = "parts"
 
@@ -171,23 +172,26 @@ class LayerwiseInference:
         states = self.blocks.x  # [k, Vloc+1, F]
         outs: list[np.ndarray] = []
         times: list[float] = []
+        tracer = get_tracer()
         for li, step in enumerate(self._layer_steps):
-            t0 = time.perf_counter()
-            states = step(self.params["layers"][li], states, self.blocks)
-            states.block_until_ready()
-            times.append(time.perf_counter() - t0)
+            # layer_times are the span durations — one timing source
+            with tracer.span("inference.layer", cat="inference",
+                             args={"layer": li}) as sp:
+                states = step(self.params["layers"][li], states, self.blocks)
+                states.block_until_ready()
+            times.append(sp.duration)
             outs.append(self.book.scatter_to_global(np.asarray(states)))
         self.layer_times = times
         return outs
 
     def sync_bytes(self) -> int:
         """Analytic halo traffic of one full layer-wise pass (forward only —
-        inference has no backward): syncs/layer x per-round volume."""
-        syncs_per_layer = 3 if self.spec.model == "gat" else 1
+        inference has no backward): every aggregate priced at its true
+        payload width (`GNNSpec.aggregate_dims`)."""
         return sum(
-            syncs_per_layer * sync_bytes_per_round(self.book, d_out,
-                                                   self.sync_mode)
-            for _, d_out in self.spec.dims()
+            sync_bytes_per_round(self.book, d, self.sync_mode)
+            for layer_dims in self.spec.aggregate_dims(self.sync_mode)
+            for d in layer_dims
         )
 
 

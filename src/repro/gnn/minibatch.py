@@ -78,6 +78,7 @@ from repro.core.wire import as_codec, codec_grad_reduce
 from repro.gnn.feature_store import FeatureStore
 from repro.gnn.pipeline import BatchPreparer, PipelineEngine
 from repro.kernels import ops
+from repro.obs.trace import get_tracer
 from repro.gnn.models import GNNSpec, init_params
 from repro.gnn.sampling import PAPER_FANOUTS, SamplePlan
 
@@ -460,6 +461,14 @@ class MiniBatchTrainer:
         # serial mode: phases are contiguous, so charge the (tiny) engine
         # overhead to compute and the four phases sum exactly to the wall
         compute = (t2 - t1) if self.overlap else (wall - pb.host_time)
+        tracer = get_tracer()
+        if tracer.enabled:
+            # the step/compute spans share the StepMetrics timestamps —
+            # one clock, whether read from the trace or from the row
+            tracer.record_span("minibatch.compute", t1, t2, cat="step",
+                               args={"step": pb.index})
+            tracer.record_span("minibatch.step", t0, t2, cat="step",
+                               args={"step": pb.index, "loss": loss})
 
         if self.rebalance:
             self._load_ema = (0.7 * self._load_ema

@@ -73,6 +73,37 @@ class GNNSpec:
         outs = [self.hidden_dim] * (self.num_layers - 1) + [self.num_classes]
         return list(zip(ins, outs))
 
+    def aggregate_dims(self, mode: str = "halo") -> list[list[int]]:
+        """Per layer, the wire width of every `sync.edge_aggregate` the
+        layer issues, in issue order — the dims that actually cross the
+        network, which depend on WHAT the strategy ships:
+
+          halo/dense/local complete partial AGGREGATES (message rows):
+            sage/gcn  [d_in]                (msg = masked src features)
+            gat       [H, H, H·dh]          (max scores, exp-sum, weighted z)
+          ring rotates the PAYLOAD itself:
+            sage/gcn  [d_in]                (payload == message width)
+            gat       [H, H+H·dh, H+H·dh]   (s_src, then the shared
+                                             [s_src | z] for den and num)
+
+        The byte accountants (`FullBatchTrainer.*_bytes_per_epoch`,
+        `LayerwiseInference.sync_bytes`) and the runtime reconciliation
+        gate sum `sync_*bytes_per_round` over exactly these widths, which
+        is what makes measured-vs-model byte checks exact.
+        """
+        out = []
+        for din, dout in self.dims():
+            if self.model == "gat":
+                h = self.gat_heads
+                dh = max(dout // h, 1)
+                if mode == "ring":
+                    out.append([h, h + h * dh, h + h * dh])
+                else:
+                    out.append([h, h, h * dh])
+            else:
+                out.append([din])
+        return out
+
 
 def _glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> jnp.ndarray:
     fan_in, fan_out = shape[0], shape[-1]

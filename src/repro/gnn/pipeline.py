@@ -60,6 +60,7 @@ from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
 from repro.gnn.feature_store import FeatureStore, FetchStats
 from repro.gnn.sampling import SamplePlan, SampledBatch, sample_blocks
+from repro.obs.trace import get_tracer
 
 __all__ = ["BatchPreparer", "PipelineEngine", "PreparedBatch"]
 
@@ -203,11 +204,14 @@ class BatchPreparer:
         executor: Optional[ThreadPoolExecutor] = None,
     ) -> PreparedBatch:
         """Produce the next batch: draw + sample (parallel over workers when
-        an executor is given), gather + stack, transfer. Phase timestamps
-        are contiguous, so the three host times sum to the host wall."""
+        an executor is given), gather + stack, transfer. The tracer's
+        `PhaseClock` keeps the phase spans contiguous (each boundary is ONE
+        clock reading), so the three host times sum to the host wall and
+        the recorded spans ARE the `PreparedBatch` durations."""
         index = self._next_index
         self._next_index += 1
-        t0 = time.perf_counter()
+        clock = get_tracer().phase_clock(cat="pipeline",
+                                         args={"step": index})
         gens = self._step_generators()
         seeds = self._draw_seeds(gens, seed_share)
         jobs = list(zip(range(len(seeds)), seeds, gens))
@@ -216,12 +220,12 @@ class BatchPreparer:
                 lambda job: self._sample_worker(*job), jobs))
         else:
             batches = [self._sample_worker(*job) for job in jobs]
-        t1 = time.perf_counter()
+        sample_time = clock.split("pipeline.sample")
         stacked_np, fetch = self._stack_batches(batches)
-        t2 = time.perf_counter()
+        fetch_time = clock.split("pipeline.fetch")
         stacked = jax.device_put(stacked_np)
         stacked = jax.block_until_ready(stacked)
-        t3 = time.perf_counter()
+        transfer_time = clock.split("pipeline.transfer")
         return PreparedBatch(
             index=index,
             stacked=stacked,
@@ -229,9 +233,9 @@ class BatchPreparer:
             input_vertices=np.array([b.num_input for b in batches]),
             remote_vertices=np.array([b.num_remote for b in batches]),
             edges=np.array([b.num_edges for b in batches]),
-            sample_time=t1 - t0,
-            fetch_time=t2 - t1,
-            transfer_time=t3 - t2,
+            sample_time=sample_time,
+            fetch_time=fetch_time,
+            transfer_time=transfer_time,
         )
 
 
@@ -298,12 +302,17 @@ class PipelineEngine:
 
     # ------------------------------------------------------------ producer
     def _produce(self) -> None:
+        tracer = get_tracer()
         try:
             while not self._stop.is_set():
                 pb = self.preparer.prepare(self._current_share(), self._pool)
                 while not self._stop.is_set():
                     try:
                         self._queue.put(pb, timeout=0.05)
+                        # prefetch-queue occupancy, sampled from the
+                        # producer side after each successful put
+                        tracer.gauge("pipeline.queue_depth",
+                                     self._queue.qsize())
                         break
                     except queue.Full:
                         continue
@@ -339,7 +348,12 @@ class PipelineEngine:
                     err = self._error
                     self.close()
                     raise RuntimeError("pipeline producer died") from err
-        wait = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        wait = t1 - t0
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.record_span("pipeline.queue_wait", t0, t1, cat="pipeline")
+            tracer.gauge("pipeline.queue_depth", self._queue.qsize())
         if isinstance(item, _Poison):
             self.close()
             if item.error is not None:

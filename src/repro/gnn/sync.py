@@ -74,6 +74,32 @@ import numpy as np
 from repro.core.partition_book import BlockRowBook, EdgePartitionBook
 from repro.core.wire import Codec, as_codec
 from repro.kernels import ops
+from repro.obs.trace import get_tracer
+
+
+def _nbytes(x) -> int:
+    """Static byte size of an array/tracer from its aval (shape/dtype are
+    concrete even under vmap/jit tracing; scalars count their itemsize)."""
+    if x is None:
+        return 0
+    return int(np.prod(x.shape)) * int(np.dtype(x.dtype).itemsize)
+
+
+def _record_collective(kind: str, cluster_bytes: int,
+                       wire_bytes: Optional[int] = None, *,
+                       layer: int = 0) -> None:
+    """Report one collective to the installed tracer at jax TRACE time.
+
+    Fires once per compilation (not per executed step) — the runtime
+    reconciliation gate compares these single-trace totals against
+    `collective_budget`/`sync_wire_bytes_per_round` for one forward pass.
+    Loss-scalar psums are deliberately not recorded: the budget's scope is
+    "per complete aggregate", matching the static gate.
+    """
+    tr = get_tracer()
+    if tr.enabled:
+        tr.collective(kind, cluster_bytes, wire_bytes=wire_bytes,
+                      layer=layer)
 
 
 class Block(NamedTuple):
@@ -236,12 +262,20 @@ class DenseSync(_PartialAggSync):
             payload, meta = codec.encode(
                 g, layer=getattr(self, "_cur_layer", 0))
             g = codec.decode(payload, meta)
+        # wire_bytes=None: the reduce moves the DEQUANTISED f32 view, so
+        # the transport-model formula (2x encoded) intentionally diverges
+        _record_collective("all-reduce",
+                           self.blk.send_idx.shape[0] * _nbytes(g),
+                           layer=getattr(self, "_cur_layer", 0))
         g = jax.lax.psum(g, self.axis)
         return g[self.blk.vglobal] * self.blk.vmask[:, None]
 
     def reduce_max(self, h):
         g = jnp.full((self.num_vertices + 1, h.shape[-1]), -1e30, h.dtype)
         g = g.at[self.blk.vglobal].max(jnp.where(self.blk.vmask[:, None], h, -1e30))
+        _record_collective("all-reduce",
+                           self.blk.send_idx.shape[0] * _nbytes(g),
+                           layer=getattr(self, "_cur_layer", 0))
         g = jax.lax.pmax(g, self.axis)
         return jnp.where(self.blk.vmask[:, None], g[self.blk.vglobal], h)
 
@@ -277,11 +311,18 @@ class HaloSync(_PartialAggSync):
     def _exchange(self, buf):
         # buf [k, B, d]; result[j] = what device j sent to me
         codec = self._codec()
-        payload, meta = codec.encode(buf, layer=getattr(self, "_cur_layer", 0))
+        lay = getattr(self, "_cur_layer", 0)
+        payload, meta = codec.encode(buf, layer=lay)
+        k = payload.shape[0]
+        pb, mb = _nbytes(payload), _nbytes(meta)
+        # cluster bytes follow the HLO output-shape convention (k devices x
+        # per-device [k, B, d] payload); wire bytes add the sender meta
+        _record_collective("all-to-all", k * pb, k * (pb + mb), layer=lay)
         out = jax.lax.all_to_all(payload, self.axis,
                                  split_axis=0, concat_axis=0)
         if meta is not None:
             # [k] sender scales, ordered by device index == bucket index
+            _record_collective("all-gather", k * k * mb, layer=lay)
             meta = jax.lax.all_gather(meta, self.axis).reshape(-1, 1, 1)
         return codec.decode(out, meta)
 
@@ -403,13 +444,21 @@ class RingSync(_CodecSync):
         codec = self._codec()
         n = payload.shape[0]
         tiled = blk.chunk_agg_order.shape[-1] > 0
-        buf, meta = codec.encode(payload, layer=self._take_layer())
+        lay = self._take_layer()
+        buf, meta = codec.encode(payload, layer=lay)
         acc = None
         for s in range(self.k):
             # issue the transfer BEFORE this stage's compute: XLA schedules
             # the collective-permute-start/done pair around the SpMM
             if s < self.k - 1:
+                _record_collective("collective-permute",
+                                   self.k * _nbytes(buf),
+                                   self.k * _nbytes(buf), layer=lay)
                 nxt = jax.lax.ppermute(buf, self.axis, self._perm())
+                if meta is not None:
+                    _record_collective("collective-permute",
+                                       self.k * _nbytes(meta),
+                                       self.k * _nbytes(meta), layer=lay)
                 nxt_meta = (jax.lax.ppermute(meta, self.axis, self._perm())
                             if meta is not None else None)
             else:

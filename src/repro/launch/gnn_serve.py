@@ -72,12 +72,24 @@ def main() -> None:
                     help="cached remote embedding rows per worker")
     ap.add_argument("--out-json", default="",
                     help="write the study-format serving row here")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record the span/counter timeline to PATH (Chrome "
+                         "trace-event JSON, schema gnn-trace/v1: inference "
+                         "layers + real gather/compute spans on the host "
+                         "process, the request lifecycle on the simulated "
+                         "clock) and write the reconciliation report to "
+                         "PATH.report.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-fast: trim the request trace")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 200)
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer, install
+        tracer = install(Tracer())
 
     g = paper_graph(args.graph, scale=args.scale, seed=0)
     print(f"[serve] graph {args.graph}: {g.num_vertices} vertices, "
@@ -165,6 +177,25 @@ def main() -> None:
         )
         study.write_rows([row], args.out_json)
         print(f"[serve] wrote study row -> {args.out_json}")
+
+    if tracer is not None:
+        import json
+
+        from repro.obs import reconcile, write_trace
+
+        rep = reconcile.build_report(
+            reconcile.reconcile_serving(report, store, tracer=tracer))
+        write_trace(args.trace, tracer)
+        with open(args.trace + ".report.json", "w") as fh:
+            json.dump(rep.to_dict(), fh, indent=2)
+            fh.write("\n")
+        c = rep.counts
+        print(f"[serve] trace -> {args.trace} "
+              f"(report {args.trace}.report.json: {c.get('ok', 0)} ok, "
+              f"{c.get('warn', 0)} warn, {c.get('error', 0)} error)")
+        for ch in rep.checks:
+            if ch.level == "error":
+                print(f"  [error] {ch.quantity}: {ch.message}")
 
 
 if __name__ == "__main__":

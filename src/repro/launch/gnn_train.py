@@ -81,8 +81,21 @@ def main() -> None:
                     help="write the run's study-format row(s) here "
                          "(core/study.py serializers — same format the "
                          "benchmark drivers emit)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record the run's span/counter timeline to PATH "
+                         "(Chrome trace-event JSON, schema gnn-trace/v1; "
+                         "open in https://ui.perfetto.dev or "
+                         "chrome://tracing) and write the measured-vs-"
+                         "model reconciliation report to PATH.report.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        # install BEFORE anything compiles: the sync strategies report
+        # their collectives when jax first traces the step function
+        from repro.obs import Tracer, install
+        tracer = install(Tracer())
 
     g = paper_graph(args.graph, scale=args.scale, seed=0)
     print(f"[gnn] graph {args.graph}: {g.num_vertices} vertices, "
@@ -160,6 +173,7 @@ def main() -> None:
                   f"(filled {tr.store.cache_sizes.tolist()})")
         steps_per_epoch = max(int(train_mask.sum()) // args.batch, 1)
         sms, losses = [], []
+        all_sms = []  # every traced step (the fetch counters span all epochs)
         for epoch in range(args.epochs):
             t1 = time.perf_counter()
             tr.set_epoch(epoch)
@@ -168,6 +182,7 @@ def main() -> None:
             for _ in range(steps_per_epoch):
                 sm = tr.train_step()
                 sms.append(sm)
+                all_sms.append(sm)
                 losses.append(sm.loss)
                 remotes.append(sm.remote_vertices.sum())
                 hit_rates.append(sm.hit_rate)
@@ -215,6 +230,29 @@ def main() -> None:
             row["loss"] = float(np.mean(losses))
             study.write_rows([row], args.out_json)
             print(f"[gnn] wrote study row -> {args.out_json}")
+
+    if tracer is not None:
+        import json
+
+        from repro.obs import reconcile, write_trace
+
+        if args.regime == "fullbatch":
+            checks = reconcile.reconcile_fullbatch(tr, tracer=tracer)
+        else:
+            checks = reconcile.reconcile_minibatch(tr, all_sms,
+                                                   tracer=tracer)
+        report = reconcile.build_report(checks)
+        write_trace(args.trace, tracer)
+        with open(args.trace + ".report.json", "w") as fh:
+            json.dump(report.to_dict(), fh, indent=2)
+            fh.write("\n")
+        c = report.counts
+        print(f"[gnn] trace -> {args.trace} "
+              f"(report {args.trace}.report.json: {c.get('ok', 0)} ok, "
+              f"{c.get('warn', 0)} warn, {c.get('error', 0)} error)")
+        for ch in report.checks:
+            if ch.level == "error":
+                print(f"  [error] {ch.quantity}: {ch.message}")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Optional
 
 import jax
@@ -41,6 +40,7 @@ from repro.gnn.feature_store import FetchStats, RowStore
 from repro.gnn.minibatch import mfg_forward
 from repro.gnn.models import GNNSpec
 from repro.gnn.sampling import SampledBatch, SamplePlan
+from repro.obs.trace import get_tracer
 from repro.serve.batcher import MicroBatch, MicroBatcher
 
 __all__ = ["ServeEngine", "ServingReport", "build_serving", "run_serving_sim"]
@@ -116,17 +116,23 @@ class ServeEngine:
         Returns (logits [plan.seeds, C] — rows past the true request count
         are padding, mask with batch.seed_mask —, the embedding-store fetch
         accounting, and the measured host compute seconds)."""
+        tracer = get_tracer()
         ids = batch.input_ids[batch.input_mask]
-        rows, stats = self.store.gather(self.worker, ids)
+        with tracer.span("serve.gather", cat="serve",
+                         args={"worker": self.worker}):
+            rows, stats = self.store.gather(self.worker, ids)
         x = np.zeros((batch.input_ids.shape[0], self.store.row_dim),
                      dtype=np.float32)
         x[batch.input_mask] = rows
         step = _compiled_step(self.spec, self.hops, self._sizes)
         dev = self._device_batch(batch, x)
-        t0 = time.perf_counter()
-        out = step(self._layer_params, dev)
-        out.block_until_ready()
-        host_s = time.perf_counter() - t0
+        # host compute = the compute span's duration (same two clock
+        # readings the pre-tracer code took)
+        with tracer.span("serve.compute", cat="serve",
+                         args={"worker": self.worker}) as sp:
+            out = step(self._layer_params, dev)
+            out.block_until_ready()
+        host_s = sp.duration
         return np.asarray(out[: self.plan.seeds]), stats, host_s
 
     def estimate(self, batch: SampledBatch,
@@ -161,6 +167,11 @@ class ServingReport:
     batch_worker: np.ndarray   # [b]
     fetch: FetchStats          # merged over every batch
     duration: float            # arrival-window length (seconds)
+    # per-request queue wait (dispatch - arrival; latency = queue_wait +
+    # its batch's service span) and per-batch miss counts, both derived
+    # from the request spans — None on reports built by older callers
+    queue_wait: Optional[np.ndarray] = None   # [n]
+    batch_miss: Optional[np.ndarray] = None   # [b]
 
     # -------------------------------------------------------------- metrics
     def _lat(self, worker: Optional[int]) -> np.ndarray:
@@ -225,9 +236,11 @@ def run_serving_sim(
     request_ids = np.asarray(request_ids, dtype=np.int64)
     arrivals = np.asarray(arrivals, dtype=np.float64)
     k = len(engines)
+    tracer = get_tracer()
     latencies: list[np.ndarray] = []
     lat_worker: list[np.ndarray] = []
-    host_times, service_times, bsizes, bworkers = [], [], [], []
+    queue_waits: list[np.ndarray] = []
+    host_times, service_times, bsizes, bworkers, bmiss = [], [], [], [], []
     all_stats: list[FetchStats] = []
 
     for w in range(k):
@@ -247,12 +260,33 @@ def run_serving_sim(
             est = engines[w].estimate(mb.batch, stats, cluster)
             t_done = t_dispatch + est.service_time
             latencies.append(t_done - mb.arrivals)
+            queue_waits.append(t_dispatch - mb.arrivals)
             lat_worker.append(np.full(take, w, dtype=np.int64))
             host_times.append(host_s)
             service_times.append(est.service_time)
             bsizes.append(take)
             bworkers.append(w)
+            bmiss.append(stats.num_remote_miss)
             all_stats.append(stats)
+            if tracer.enabled:
+                # the request lifecycle on the simulator's virtual clock:
+                # enqueue→dispatch per request on the worker's queue
+                # track, then the modeled gather/compute service phases
+                for rid, arr in zip(mb.ids, mb.arrivals):
+                    tracer.record_span(
+                        "serve.queue", float(arr), float(t_dispatch),
+                        cat="serve", clock="model",
+                        track=f"serve.worker{w}.queue",
+                        args={"rid": int(rid)})
+                t_fetch = t_dispatch + est.sample_time + est.fetch_time
+                tracer.record_span(
+                    "serve.service.gather", float(t_dispatch),
+                    float(t_fetch), cat="serve", clock="model",
+                    track=f"serve.worker{w}", args={"size": int(take)})
+                tracer.record_span(
+                    "serve.service.compute", float(t_fetch), float(t_done),
+                    cat="serve", clock="model",
+                    track=f"serve.worker{w}", args={"size": int(take)})
             t_free = t_done
             i += take
 
@@ -270,6 +304,9 @@ def run_serving_sim(
         batch_worker=np.asarray(bworkers, dtype=np.int64),
         fetch=FetchStats.merge(all_stats),
         duration=float(arrivals.max()) if arrivals.size else 0.0,
+        queue_wait=(np.concatenate(queue_waits) if queue_waits
+                    else np.zeros(0)),
+        batch_miss=np.asarray(bmiss, dtype=np.int64),
     )
 
 
