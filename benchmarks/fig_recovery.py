@@ -1,0 +1,178 @@
+"""Beyond-paper sweep: recovery cost vs partitioner under injected faults.
+
+Part A (elastic training): a seeded worker-loss at a crash epoch shrinks a
+REAL full-batch run k -> k-1 (repro.fault.run_elastic_fullbatch), a later
+worker-join grows it back; each rescale is priced by the cost model
+(restore + re-partition + re-compile). The claim: a quality partitioner
+(hep100) pays a larger re-partition bill per fault than random, so churn
+taxes its per-epoch advantage — the crossover row says how many post-fault
+epochs the advantage needs to amortise the extra recovery cost.
+
+Part B (serving failover): a seeded worker-death mid-trace re-routes the
+dead worker's requests to survivors (replica-aware for edge partitions).
+EVERY request must still be answered — the script exits non-zero if any
+are dropped — and the degraded-window p50/p99 quantify the transition:
+quality partitions route fewer vertices per survivor, so their degraded
+tail stays lower.
+
+Emits one JSON row per cell via the shared `core/study.py` serializers;
+`--out-json PATH` additionally writes them as one file (the CI artifact).
+Standalone `--smoke` runs the trimmed grid without env setup.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import FAST, SCALE, cache, emit, spec, timed
+
+SMOKE = FAST or "--smoke" in sys.argv
+PARTITIONERS = ("random", "hep100")
+CRASH_EPOCHS = (1,) if SMOKE else (1, 3)
+EPOCHS = 4 if SMOKE else 8
+K = 4
+SERVE_PARTITIONERS = ("random", "metis") if SMOKE else ("random", "metis", "hep100")
+REC_SCALE = float(os.environ.get("BENCH_SCALE", "0.02")) if SMOKE else SCALE
+N_REQUESTS = 160 if SMOKE else 400
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out-json", default="",
+                    help="also write all rows to this file (CI artifact)")
+    args, _ = ap.parse_known_args()
+
+    import numpy as np
+
+    from repro.core import cost_model
+    from repro.core.study import (
+        fullbatch_result_row,
+        serve_row,
+        write_rows,
+    )
+    from repro.fault import FaultPlan
+    from repro.fault.recovery import run_elastic_fullbatch
+
+    c = cache()
+    sp = spec(feature=32, hidden=32, layers=2)
+    g = c.graph("OR", REC_SCALE, 0)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_vertices, sp.feature_dim)).astype(np.float32)
+    labels = rng.integers(0, sp.num_classes, g.num_vertices).astype(np.int32)
+    train_mask = rng.random(g.num_vertices) < 0.3
+    rows = []
+
+    # ---------------------------------------- Part A: elastic degrade/recover
+    grow_gap = 2  # epochs between the loss and the rejoin
+    for method in PARTITIONERS:
+        rec = c.edge_partition(g, method, K, 0)
+        est = cost_model.fullbatch_epoch(rec.book, sp)
+        for crash in CRASH_EPOCHS:
+            plan = FaultPlan.parse(
+                [f"worker-loss@epoch:{crash}",
+                 f"worker-join@epoch:{crash + grow_gap}"], seed=0)
+            res, wall = timed(lambda: run_elastic_fullbatch(
+                g, feats, labels, train_mask, sp, k=K, epochs=EPOCHS,
+                plan=plan, partitioner=method, seed=0))
+            assert plan.handled_count == plan.injected_count == len(res.events)
+            shrink = res.events[0].estimate
+            row = fullbatch_result_row(
+                "OR", method, K, sp, metrics=rec.metrics,
+                partition_time=rec.partition_time, est=est, recovery=shrink)
+            row.update({
+                "crash_epoch": crash,
+                "epochs": EPOCHS,
+                "k_history": res.k_history,
+                "n_rescale": len(res.events),
+                "recovery_time_total": res.recovery_time_total,
+                "loss_final": res.losses[-1],
+                "elastic_wall": wall,
+            })
+            rows.append(row)
+            print(json.dumps({
+                "figure": "recovery", "part": "elastic", "graph": "OR",
+                "k": K, "partitioner": method, "crash_epoch": crash,
+                "k_history": res.k_history,
+                "recovery_time_s": round(shrink.recovery_time, 4),
+                "restore_s": round(shrink.restore_time, 6),
+                "repartition_s": round(shrink.repartition_time, 4),
+                "recompile_s": round(shrink.recompile_time, 4),
+                "epoch_time_s": round(est.epoch_time, 4),
+                "loss_final": round(res.losses[-1], 4),
+            }))
+
+    def pick_a(method, crash):
+        for r in rows:
+            if (r.get("method"), r.get("crash_epoch")) == (method, crash):
+                return r
+        raise KeyError((method, crash))
+
+    # claims: time-to-recover per partitioner + amortization crossover —
+    # the epochs hep100's per-epoch advantage needs to pay back its extra
+    # recovery cost after one fault (inf when random recovers no cheaper)
+    for crash in CRASH_EPOCHS:
+        rnd, hq = pick_a("random", crash), pick_a("hep100", crash)
+        adv = rnd["epoch_time"] - hq["epoch_time"]
+        extra = hq["recovery_time"] - rnd["recovery_time"]
+        crossover = extra / adv if adv > 0 and extra > 0 else (
+            0.0 if extra <= 0 else float("inf"))
+        emit(f"recovery.elastic.crash{crash}", 0.0,
+             f"recovery_random_s={rnd['recovery_time']:.4f};"
+             f"recovery_hep100_s={hq['recovery_time']:.4f};"
+             f"epoch_advantage_s={adv:.4f};"
+             f"crossover_epochs={crossover:.2f};"
+             f"shrink_and_grow={rnd['n_rescale'] == hq['n_rescale'] == 2}")
+
+    # ------------------------------------------- Part B: serving worker-death
+    sp_serve = spec(feature=32, hidden=64, layers=2)
+    dropped = False
+    for method in SERVE_PARTITIONERS:
+        plan = FaultPlan.parse(["worker-death@t:0.25,worker:1"], seed=0)
+        r = serve_row(
+            "OR", method, K, sp_serve, scale=REC_SCALE, cache=c,
+            qps=200.0, n_requests=N_REQUESTS, hops=1, fanout=10,
+            max_batch=32, max_wait=5e-4,
+            fault_plan=plan, detect_delay=0.005,
+        )
+        answered = r["requests"] == N_REQUESTS
+        dropped = dropped or not answered
+        rows.append(r)
+        print(json.dumps({
+            "figure": "recovery", "part": "serving", "graph": "OR", "k": K,
+            "partitioner": method, "dead_worker": r.get("dead_worker", -1),
+            "rerouted": r.get("rerouted", 0),
+            "answered": answered,
+            "served": r["requests"],
+            "transition_window_ms": round(
+                r.get("transition_window", 0.0) * 1e3, 3),
+            "transition_p50_ms": round(r.get("transition_p50", 0.0) * 1e3, 4),
+            "transition_p99_ms": round(r.get("transition_p99", 0.0) * 1e3, 4),
+            "p99_ms": round(r["latency_p99"] * 1e3, 4),
+        }))
+
+    def pick_b(method):
+        for r in rows:
+            if r.get("method") == method and "transition_p99" in r:
+                return r
+        raise KeyError(method)
+
+    rnd, met = pick_b("random"), pick_b("metis")
+    emit("recovery.serving", 0.0,
+         f"every_request_answered={not dropped};"
+         f"rerouted_random={rnd['rerouted']};rerouted_metis={met['rerouted']};"
+         f"degraded_p99_random_ms={rnd['transition_p99']*1e3:.3f};"
+         f"degraded_p99_metis_ms={met['transition_p99']*1e3:.3f}")
+
+    if args.out_json:
+        write_rows(rows, args.out_json)
+        print(f"# wrote {len(rows)} rows -> {args.out_json}", file=sys.stderr)
+    if dropped:
+        print("# FAIL: requests dropped during worker-death failover",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
     CheckpointManager,
+    checkpoint_extra,
     restore_latest,
     save_checkpoint,
 )

@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -88,7 +89,17 @@ def _complete_checkpoints(directory: str) -> list[tuple[int, str]]:
         if name.startswith("step_") and os.path.exists(
             os.path.join(full, "manifest.json")
         ):
-            out.append((int(name[5:]), full))
+            try:
+                step = int(name[5:])
+            except ValueError:
+                # a stray directory (step_final/, step_backup/, ...) must not
+                # kill restore — skip it loudly instead
+                warnings.warn(
+                    f"ignoring non-checkpoint entry {name!r} in {directory!r}"
+                    " (step_<n> suffix is not an integer)",
+                    stacklevel=2)
+                continue
+            out.append((step, full))
     return sorted(out)
 
 
@@ -108,11 +119,19 @@ def restore_latest(directory: str, target_tree: Any,
     step, path = ckpts[-1]
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    leaves, _, treedef = _flatten_with_paths(target_tree)
+    leaves, paths, treedef = _flatten_with_paths(target_tree)
     assert len(leaves) == len(manifest["leaves"]), (
         f"checkpoint has {len(manifest['leaves'])} leaves, "
         f"target tree has {len(leaves)}"
     )
+    # the zip below is positional — guard it: a target tree with the same
+    # leaf count but different structure must fail by NAME, not by silently
+    # loading leaf i into the wrong slot (or by a shape assert if lucky)
+    for path_t, rec in zip(paths, manifest["leaves"]):
+        if path_t != rec["path"]:
+            raise ValueError(
+                f"checkpoint/target tree mismatch at leaf {rec['path']!r}: "
+                f"target tree has {path_t!r} in that position")
     new_leaves = []
     shard_leaves = (
         jax.tree_util.tree_flatten(
@@ -138,6 +157,20 @@ def restore_latest(directory: str, target_tree: Any,
                 if target_dtype is not None else arr
             )
     return step, jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def checkpoint_extra(directory: str) -> tuple[Optional[int], dict]:
+    """The (step, extra-metadata) of the newest complete checkpoint, read
+    without touching any leaf file — resume logic needs the run coordinates
+    (epoch, step, has_ef) BEFORE it can build the target tree to restore
+    into. Returns (None, {}) when no checkpoint exists."""
+    ckpts = _complete_checkpoints(directory)
+    if not ckpts:
+        return None, {}
+    step, path = ckpts[-1]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return step, manifest.get("extra", {}) or {}
 
 
 class CheckpointManager:

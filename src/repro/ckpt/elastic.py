@@ -44,12 +44,26 @@ def rescale_fullbatch(
     seed: int = 0,
 ) -> FullBatchTrainer:
     """Scale a full-batch GNN trainer from k to new_k machines: re-partition
-    the graph, rebuild device blocks, carry the model/optimizer state over."""
+    the graph, rebuild device blocks, carry ALL run state over — model and
+    optimizer (partition-independent), the learning rate and wire codec
+    (including the tier a VariableRatioCodec's epoch schedule has advanced
+    to, since `trainer.codec` holds the advanced instance), and the lossy
+    codec's error-feedback carry, re-stacked for the new device count."""
     assignment = partition_edges(graph, new_k, partitioner, seed=seed)
     new = FullBatchTrainer.build(
         graph, assignment, new_k, trainer.spec, features, labels, train_mask,
         sync_mode=trainer.sync_mode, mode=trainer.mode, seed=seed,
+        lr=trainer.lr, codec=trainer.codec,
     )
     new.params = trainer.params        # model state is partition-independent
     new.opt_state = trainer.opt_state
+    if trainer.ef_state is not None:
+        # EF residuals are per-device [k, ...] (unstacked when k == 1): the
+        # device mean is the state the gradient all-reduce would have folded
+        # in, so replicate it across the new device count
+        old_k = trainer.book.k
+        mean = (trainer.ef_state if old_k == 1 else
+                jax.tree.map(lambda e: e.mean(axis=0), trainer.ef_state))
+        new.ef_state = (mean if new_k == 1 else jax.tree.map(
+            lambda z: jax.numpy.broadcast_to(z, (new_k,) + z.shape), mean))
     return new

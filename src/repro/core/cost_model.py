@@ -31,6 +31,8 @@ __all__ = [
     "fullbatch_epoch",
     "minibatch_step",
     "overlapped_step_time",
+    "RecoveryEstimate",
+    "recovery_time",
     "ring_bytes_per_round",
     "serve_request",
 ]
@@ -64,6 +66,10 @@ class ClusterSpec:
     sample_rate: float    # sampled edges/s per machine (host sampler)
     remote_adj_cost: float  # seconds per remote vertex adjacency access
     sample_hop_overhead: float = 5e-4  # fixed per-hop cost (RPC round, batching)
+    # recovery constants (fault/recovery.py): checkpoint-restore read
+    # bandwidth (shared FS) and the XLA re-compile a mesh-shape change pays
+    disk_bw: float = 500e6      # bytes/s checkpoint restore read bandwidth
+    recompile_s: float = 30.0   # seconds to re-trace + re-compile the step
 
 
 # Paper cluster: 8-core 2.4 GHz Haswell. Dense f32 peak would be
@@ -444,4 +450,52 @@ def serve_request(
         compute_time=compute,
         fetch_bytes=fetch_bytes,
         wire_bytes=wire_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# failure recovery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEstimate:
+    """Cluster cost of one recovery: restore + re-partition + re-compile.
+
+    The three terms are the paper-cluster price of what elastic recovery
+    actually does (fault/recovery.py): read the checkpoint back from the
+    shared filesystem, re-run the partitioner for the new worker count, and
+    re-trace/re-compile the step function for the new mesh shape. This is
+    the amortization question (tab3) extended to failures: a high-quality
+    partitioner's epoch-time advantage must now also pay back its
+    re-partition cost every time recovery forces one.
+    """
+
+    restore_time: float       # checkpoint read: bytes / disk_bw + latency
+    repartition_time: float   # measured host partitioner wall (real data)
+    recompile_time: float     # XLA re-trace + re-compile for the new mesh
+
+    @property
+    def recovery_time(self) -> float:
+        return self.restore_time + self.repartition_time + self.recompile_time
+
+
+def recovery_time(
+    ckpt_bytes: float,
+    partition_time: float,
+    *,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+    compile_time: Optional[float] = None,
+) -> RecoveryEstimate:
+    """Price one recovery. `ckpt_bytes` is the checkpointable state volume
+    (params + opt state + EF carry); `partition_time` is the MEASURED
+    re-partition wall (the partitioners run for real here, exactly like the
+    partition_time column of every study row); `compile_time` overrides the
+    cluster's re-compile constant when a measured value exists."""
+    restore = cluster.net_latency + float(ckpt_bytes) / cluster.disk_bw
+    return RecoveryEstimate(
+        restore_time=restore,
+        repartition_time=float(partition_time),
+        recompile_time=(cluster.recompile_s if compile_time is None
+                        else float(compile_time)),
     )

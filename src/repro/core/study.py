@@ -181,12 +181,24 @@ def fullbatch_result_row(
     est,
     sync_mode: str = "halo",
     codec: str = "fp32",
+    recovery=None,
 ) -> dict:
     """Serialize one DistGNN result (shared by the study grid and the CLI).
 
     `comm_bytes` is the logical (f32) replica-sync volume; `wire_bytes` is
-    what actually crosses the network under `codec` (equal under fp32)."""
+    what actually crosses the network under `codec` (equal under fp32).
+    `recovery` (a `cost_model.RecoveryEstimate`, optional) adds the priced
+    cost of one worker-loss recovery — restore + re-partition + re-compile
+    — which is how a partitioner's quality advantage gets taxed by churn."""
     wire = est.comm_bytes if getattr(est, "wire_bytes", None) is None else est.wire_bytes
+    rec_cols = {}
+    if recovery is not None:
+        rec_cols = {
+            "recovery_time": float(recovery.recovery_time),
+            "recovery_restore_time": float(recovery.restore_time),
+            "recovery_repartition_time": float(recovery.repartition_time),
+            "recovery_recompile_time": float(recovery.recompile_time),
+        }
     return {
         "graph": graph_key, "method": method, "k": k,
         "sync_mode": sync_mode, "codec": codec,
@@ -203,6 +215,7 @@ def fullbatch_result_row(
         "memory_max": float(est.memory.max()),
         "memory_balance": float(est.memory.max() / est.memory.mean()),
         "oom": est.oom,
+        **rec_cols,
     }
 
 
@@ -530,6 +543,23 @@ def serve_result_row(
         # lets fig_serving attribute a p99 to queueing vs compute
         **obs_aggregate.request_breakdown(
             report.latency, getattr(report, "queue_wait", None)),
+        **_serve_fault_cols(report),
+    }
+
+
+def _serve_fault_cols(report) -> dict:
+    """Degraded-window columns of a faulted serving run (worker-death)."""
+    if getattr(report, "fault_time", None) is None:
+        return {}
+    ts = report.transition_stats()
+    return {
+        "fault_time": ts["fault_time"],
+        "dead_worker": int(report.dead_worker),
+        "rerouted": ts["rerouted"],
+        "transition_window": ts["window"],
+        "transition_requests": ts["requests"],
+        "transition_p50": ts["p50"],
+        "transition_p99": ts["p99"],
     }
 
 
@@ -552,12 +582,18 @@ def serve_row(
     cluster: ClusterSpec = PAPER_CLUSTER,
     cache: Optional[StudyCache] = None,
     codec=None,
+    fault_plan=None,
+    detect_delay: float = 0.0,
 ) -> dict:
     """One serving study row: REAL layer-wise inference + request simulation
     on the real partition, cost-model cluster latencies. `codec` installs a
     wire codec on the embedding store: miss rows are decoded from their
     encoded form (lossy codecs perturb served embeddings) and the service
     time is priced from encoded bytes.
+
+    `fault_plan` (a `repro.fault.FaultPlan` with a worker-death event) kills
+    one worker mid-trace; the failover map is derived here (replica-aware
+    for edge partitions) and the row gains the degraded-window columns.
 
     `method` may be a vertex partitioner (the embedding store shards by it
     directly) or an edge partitioner (the store shards by the edge book's
@@ -583,11 +619,13 @@ def serve_row(
         owner = rec.assignment
         edge_assignment = edge_assignment_from_vertex(g, owner)
         quality = rec.metrics.edge_cut
+        edge_book = None  # vertex partitions hold no replicas
     else:
         rec = cache.edge_partition(g, method, k, seed)
         edge_assignment = rec.assignment
         owner = rec.book.master_assignment()
         quality = rec.metrics.replication_factor
+        edge_book = rec.book
 
     memo = getattr(cache, "_serve_embeddings", None)
     if memo is None:
@@ -615,8 +653,17 @@ def serve_row(
     rng = np.random.default_rng(seed + 99)
     request_ids = rng.integers(0, g.num_vertices, n_requests)
     arrivals = np.sort(rng.uniform(0.0, n_requests / qps, n_requests))
+    failover = None
+    if fault_plan is not None and fault_plan.events_of("worker-death"):
+        from repro.fault.recovery import failover_assignment
+
+        ev = fault_plan.events_of("worker-death")[0]
+        dead = fault_plan.resolve_worker(ev, k)
+        failover = failover_assignment(owner, dead, k, book=edge_book)
     report = run_serving_sim(engines, batchers, owner, request_ids, arrivals,
-                             cluster=cluster)
+                             cluster=cluster, fault_plan=fault_plan,
+                             failover_owner=failover,
+                             detect_delay=detect_delay)
     return serve_result_row(
         graph_key, method, k, spec, report,
         qps=qps, hops=hops, fanout=fanout, max_batch=max_batch,

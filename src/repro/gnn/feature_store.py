@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
 from repro.core.wire import Codec, as_codec
+from repro.fault import inject as fault_inject
 from repro.obs.trace import get_tracer
 
 __all__ = [
@@ -297,6 +298,9 @@ class RowStore:
         state only, writes only to the freshly-allocated `out` block."""
         if self.rows is None:
             raise ValueError("accounting-only store (built without rows)")
+        hook = fault_inject.fetch_hook()
+        if hook is not None:  # injection seam: may raise TransientFetchFault
+            hook(worker, ids)
         tracer = get_tracer()
         t0 = time.perf_counter()
         ids = np.asarray(ids, dtype=np.int64)

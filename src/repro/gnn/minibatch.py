@@ -290,6 +290,8 @@ class MiniBatchTrainer:
     prefetch_depth: int = 2
     codec: Any = None                  # wire codec name/instance (None=fp32)
     ef_state: Any = None               # error-feedback carry (lossy codecs)
+    start_step: int = 0                # resume: first global step to draw
+    injector: Any = None               # fault.FaultInjector (None = no faults)
     _load_ema: Optional[np.ndarray] = None
     _seed_share: Optional[np.ndarray] = None
 
@@ -314,6 +316,8 @@ class MiniBatchTrainer:
         overlap: bool = False,
         prefetch_depth: int = 2,
         codec=None,
+        start_step: int = 0,
+        injector=None,
     ) -> "MiniBatchTrainer":
         from repro.optim import adam_init
 
@@ -337,6 +341,7 @@ class MiniBatchTrainer:
             opt_state=adam_init(params), seed=seed,
             lr=lr, rebalance=rebalance, store=store,
             overlap=overlap, prefetch_depth=prefetch_depth, codec=codec,
+            start_step=start_step, injector=injector,
             _load_ema=np.ones(k), _seed_share=np.full(k, 1.0 / k),
         )
 
@@ -350,7 +355,8 @@ class MiniBatchTrainer:
             plan=self.plan, fanouts=self.fanouts, labels=self.labels,
             train_pools=self.train_vertices_per_worker,
             global_batch=self.global_batch, tiled_layout=self._tiled_layout,
-            seed=self.seed,
+            seed=self.seed, injector=self.injector,
+            start_step=self.start_step,
         )
         engine = PipelineEngine(
             preparer, overlap=self.overlap, prefetch_depth=self.prefetch_depth)

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition_book import VertexPartitionBook
+from repro.fault.inject import FaultInjector, InjectedFault, retry_call
 from repro.gnn.feature_store import FeatureStore, FetchStats
 from repro.gnn.sampling import SamplePlan, SampledBatch, sample_blocks
 from repro.obs.trace import get_tracer
@@ -106,6 +107,10 @@ class BatchPreparer:
         global_batch: int,
         tiled_layout: bool,
         seed: int = 0,
+        injector: Optional[FaultInjector] = None,
+        start_step: int = 0,
+        retry_attempts: int = 3,
+        retry_timeout: float = 5.0,
     ) -> None:
         self.graph = graph
         self.book = book
@@ -116,52 +121,84 @@ class BatchPreparer:
         self.train_pools = train_pools
         self.global_batch = global_batch
         self.tiled_layout = tiled_layout
+        self.injector = injector
+        self.retry_attempts = retry_attempts
+        self.retry_timeout = retry_timeout
+        if injector is not None and injector.k is None:
+            injector.k = len(train_pools)
         self._root_ss = np.random.SeedSequence(seed)
-        self._next_index = 0
+        # Resume fast-forward: `spawn` is stateful (spawn-key counter), so
+        # spawning `start_step` children at once and discarding them leaves
+        # the tree exactly where a fresh preparer stands after `start_step`
+        # prepare() calls — batch t is bitwise (seed, t) either way.
+        if start_step > 0:
+            self._root_ss.spawn(start_step)
+        self._next_index = start_step
         # Force the lazily-built CSR (and degree-independent caches) now, on
         # one thread, so parallel per-worker sampling never races its
         # construction.
         graph.csr()
 
     # ------------------------------------------------------------------ rng
-    def _step_generators(self) -> "list[np.random.Generator]":
-        """One independent generator per worker for the next step.
+    def _step_seed_seqs(self) -> "list[np.random.SeedSequence]":
+        """One independent `SeedSequence` per worker for the next step.
 
         `SeedSequence.spawn` is stateful (spawn-key counter), so step
         children MUST be spawned in step order — `prepare()` is the only
         caller and runs on a single control thread per engine. The worker
         grandchildren make batch t worker w a pure function of (seed, t, w),
-        independent of sampling thread schedule.
+        independent of sampling thread schedule — and a RETRIED (t, w) phase
+        rebuilds its generator from the same sequence, so the retried batch
+        is bitwise the first attempt.
         """
         (step_ss,) = self._root_ss.spawn(1)
-        return [np.random.default_rng(ss) for ss in step_ss.spawn(len(self.train_pools))]
+        return list(step_ss.spawn(len(self.train_pools)))
 
-    def _draw_seeds(self, gens, seed_share: Optional[np.ndarray]) -> "list[np.ndarray]":
+    def _seed_counts(self, seed_share: Optional[np.ndarray]) -> np.ndarray:
         k = self.book.k
         shares = np.full(k, 1.0 / k) if seed_share is None else seed_share
         counts = np.maximum((shares * self.global_batch).astype(int), 1)
-        counts = np.minimum(counts, self.plan.seeds)
-        out = []
-        for w in range(k):
-            pool = self.train_pools[w]
-            if pool.shape[0] == 0:
-                out.append(np.zeros(0, np.int64))
-                continue
-            n = min(int(counts[w]), pool.shape[0])
-            out.append(gens[w].choice(pool, size=n, replace=False).astype(np.int64))
-        return out
+        return np.minimum(counts, self.plan.seeds)
 
     # ------------------------------------------------------------- sampling
-    def _sample_worker(self, w: int, seeds: np.ndarray,
-                       gen: np.random.Generator) -> SampledBatch:
+    def _draw_and_sample(self, index: int, w: int,
+                         ss: np.random.SeedSequence,
+                         count: int) -> SampledBatch:
+        """Worker w's draw + k-hop sampling for step `index`, one attempt.
+
+        Everything random derives from `ss` inside this call, so the retry
+        wrapper can re-invoke it after a transient fault and get the
+        identical batch.
+        """
+        gen = np.random.default_rng(ss)
+        if self.injector is not None:
+            self.injector.on_sample(index, w)
+        pool = self.train_pools[w]
+        if pool.shape[0] == 0:
+            seeds = np.zeros(0, np.int64)
+        else:
+            n = min(int(count), pool.shape[0])
+            seeds = gen.choice(pool, size=n, replace=False).astype(np.int64)
         return sample_blocks(
             self.graph, seeds, self.fanouts, self.plan, gen,
             self.labels, owner=self.book.owner, worker=w,
             tiled_layout=self.tiled_layout,
         )
 
+    def _sample_job(self, index: int, w: int, ss: np.random.SeedSequence,
+                    count: int) -> SampledBatch:
+        return retry_call(
+            lambda: self._draw_and_sample(index, w, ss, count),
+            phase="sample", attempts=self.retry_attempts,
+            timeout=self.retry_timeout)
+
     # ------------------------------------------------------------- stacking
-    def _stack_batches(self, batches: "list[SampledBatch]"):
+    def _gather_worker(self, index: int, w: int, ids: np.ndarray):
+        if self.injector is not None:
+            self.injector.on_fetch(index, w)
+        return self.store.gather(w, ids)
+
+    def _stack_batches(self, index: int, batches: "list[SampledBatch]"):
         """The feature-loading phase: every worker pulls its input vertices
         through the feature store ({shard, cache, remote} split — concurrent
         `gather` calls are safe, see the RowStore read-only contract), then
@@ -172,7 +209,11 @@ class BatchPreparer:
             x = np.zeros((b.input_ids.shape[0], self.store.row_dim),
                          dtype=self.store.rows.dtype)
             valid = b.input_mask
-            x[valid], st = self.store.gather(w, b.input_ids[valid])
+            ids = b.input_ids[valid]
+            x[valid], st = retry_call(
+                lambda w=w, ids=ids: self._gather_worker(index, w, ids),
+                phase="fetch", attempts=self.retry_attempts,
+                timeout=self.retry_timeout)
             fetch.append(st)
             xs.append(x)
         stacked = {
@@ -210,18 +251,20 @@ class BatchPreparer:
         the recorded spans ARE the `PreparedBatch` durations."""
         index = self._next_index
         self._next_index += 1
+        if self.injector is not None:
+            self.injector.at_step(index)
         clock = get_tracer().phase_clock(cat="pipeline",
                                          args={"step": index})
-        gens = self._step_generators()
-        seeds = self._draw_seeds(gens, seed_share)
-        jobs = list(zip(range(len(seeds)), seeds, gens))
+        seqs = self._step_seed_seqs()
+        counts = self._seed_counts(seed_share)
+        jobs = [(index, w, ss, int(counts[w])) for w, ss in enumerate(seqs)]
         if executor is not None:
             batches = list(executor.map(
-                lambda job: self._sample_worker(*job), jobs))
+                lambda job: self._sample_job(*job), jobs))
         else:
-            batches = [self._sample_worker(*job) for job in jobs]
+            batches = [self._sample_job(*job) for job in jobs]
         sample_time = clock.split("pipeline.sample")
-        stacked_np, fetch = self._stack_batches(batches)
+        stacked_np, fetch = self._stack_batches(index, batches)
         fetch_time = clock.split("pipeline.fetch")
         stacked = jax.device_put(stacked_np)
         stacked = jax.block_until_ready(stacked)
@@ -356,6 +399,11 @@ class PipelineEngine:
             tracer.gauge("pipeline.queue_depth", self._queue.qsize())
         if isinstance(item, _Poison):
             self.close()
+            if isinstance(item.error, InjectedFault):
+                # injected faults keep their identity across the producer
+                # boundary so the consumer's recovery (crash -> resume) sees
+                # the same exception type serial mode raises inline
+                raise item.error
             if item.error is not None:
                 raise RuntimeError("pipeline producer failed") from item.error
             raise RuntimeError("pipeline closed")

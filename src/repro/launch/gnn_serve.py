@@ -14,6 +14,7 @@ per-worker p50/p99 latency and sustainable QPS on the paper's cluster.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -79,12 +80,34 @@ def main() -> None:
                          "process, the request lifecycle on the simulated "
                          "clock) and write the reconciliation report to "
                          "PATH.report.json")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="SPEC",
+                    help="deterministic fault injection (repeatable): "
+                         "worker-death@t:0.5,worker:1 kills a serving "
+                         "worker at virtual time t; its requests fail over "
+                         "to surviving workers (replica-aware "
+                         "master_assignment re-derivation) and EVERY "
+                         "request is still answered")
+    ap.add_argument("--detect-delay", type=float, default=0.0,
+                    help="seconds before a death is detected (rerouted "
+                         "requests become visible to survivors after it)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-fast: trim the request trace")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 200)
+
+    plan = None
+    if args.inject_fault:
+        from repro.fault import FaultPlan, FaultSpecError
+        try:
+            plan = FaultPlan.parse(args.inject_fault, seed=args.seed)
+        except FaultSpecError as e:
+            print(f"[serve] bad --inject-fault: {e}")
+            sys.exit(1)
+        print(f"[serve] fault plan: "
+              f"{'; '.join(ev.describe() for ev in plan.events)}")
 
     tracer = None
     if args.trace:
@@ -151,7 +174,22 @@ def main() -> None:
     request_ids = rng.integers(0, g.num_vertices, args.requests)
     arrivals = np.sort(rng.uniform(0.0, args.requests / args.qps,
                                    args.requests))
-    report = run_serving_sim(engines, batchers, owner, request_ids, arrivals)
+    failover = None
+    if plan is not None and plan.events_of("worker-death"):
+        from repro.fault import recovery as fault_recovery
+        ev = plan.events_of("worker-death")[0]
+        dead = plan.resolve_worker(ev, args.k)
+        # replica-aware only for edge partitions: mirrors already hold the
+        # dead master's vertices; vertex partitions spread deterministically
+        book = engine.book if args.partitioner in EDGE_PARTITIONERS else None
+        failover = fault_recovery.failover_assignment(
+            owner, dead, args.k, book=book)
+        moved = int((np.asarray(owner) == dead).sum())
+        print(f"[serve] failover map: worker {dead} dies, {moved} vertices "
+              f"re-mastered ({'replica-aware' if book is not None else 'spread'})")
+    report = run_serving_sim(engines, batchers, owner, request_ids, arrivals,
+                             fault_plan=plan, failover_owner=failover,
+                             detect_delay=args.detect_delay)
 
     for row in report.worker_rows():
         print(f"[serve] worker {row['worker']}: served {row['served']:5d}  "
@@ -166,6 +204,18 @@ def main() -> None:
           f"wire {report.fetch.wire_bytes/2**20:.2f} MiB ({args.codec})  "
           f"host compute p50 {np.percentile(report.host_time, 50)*1e3:.2f} "
           f"ms/batch")
+    if report.fault_time is not None:
+        ts = report.transition_stats()
+        answered = report.served() == args.requests
+        print(f"[serve] worker-death: worker {report.dead_worker} died at "
+              f"t={ts['fault_time']:.3f}s, {ts['rerouted']} requests "
+              f"rerouted, transition window {ts['window']*1e3:.1f} ms "
+              f"({ts['requests']} requests, p50 {ts['p50']*1e3:.2f} ms, "
+              f"p99 {ts['p99']*1e3:.2f} ms)")
+        print(f"[serve] every request answered: {answered} "
+              f"({report.served()}/{args.requests})")
+        if not answered:
+            sys.exit(1)
 
     if args.out_json:
         row = study.serve_result_row(
@@ -183,8 +233,10 @@ def main() -> None:
 
         from repro.obs import reconcile, write_trace
 
-        rep = reconcile.build_report(
-            reconcile.reconcile_serving(report, store, tracer=tracer))
+        checks = reconcile.reconcile_serving(report, store, tracer=tracer)
+        if plan is not None:
+            checks += reconcile.reconcile_recovery(plan, tracer=tracer)
+        rep = reconcile.build_report(checks)
         write_trace(args.trace, tracer)
         with open(args.trace + ".report.json", "w") as fh:
             json.dump(rep.to_dict(), fh, indent=2)

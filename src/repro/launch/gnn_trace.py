@@ -18,7 +18,7 @@ Runs small representative programs with the tracer installed:
 Outputs a merged Chrome trace-event timeline (schema gnn-trace/v1, loadable
 in https://ui.perfetto.dev or chrome://tracing) which is round-tripped
 through the exporter's own loader, plus a JSON reconciliation report
-(schema "gnn-trace-report/v1", the gnn-lint report shape). Run from the
+(schema "gnn-trace-report/v2", the gnn-lint report shape). Run from the
 repo root:
 
     PYTHONPATH=src python -m repro.launch.gnn_trace --smoke \

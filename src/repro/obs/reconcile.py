@@ -16,7 +16,11 @@ the same predictions:
   * gradient all-reduce bytes against `cost_model.minibatch_step`'s
     parameter count — a model-granularity check (the analytic count drops
     biases/attention vectors), so it carries a documented 25% tolerance;
-  * phase walls: sample+fetch+transfer+compute against the step wall.
+  * phase walls: sample+fetch+transfer+compute against the step wall;
+  * fault accounting (`reconcile_recovery`): the tracer's fault.injected /
+    fault.handled counters against the `FaultPlan`'s own books — exact —
+    and the fault.recovery_time_model counter against the recomputed
+    `RecoveryEstimate` sum, one recovery span per executed rescale.
 
 Fetch-byte and phase checks apply to the serial engine; the pipelined
 engine prefetches beyond the consumed steps and interleaves phases by
@@ -26,7 +30,7 @@ Tolerances are per quantity (see `README.md`'s reconciliation table).
 ``tol_rel == 0.0`` means a bitwise ``measured == predicted`` comparison —
 fp32 byte counts must match exactly, not approximately.
 
-The report (schema ``gnn-trace-report/v1``) mirrors the gnn-lint report:
+The report (schema ``gnn-trace-report/v2``) mirrors the gnn-lint report:
 programs, counts by level, exit_code (1 on any error), and one entry per
 check with measured/predicted/tolerance detail.
 """
@@ -43,9 +47,11 @@ from .trace import Tracer, get_tracer
 
 __all__ = ["REPORT_SCHEMA", "Check", "ReconcileReport", "make_check",
            "build_report", "reconcile_minibatch", "reconcile_fullbatch",
-           "reconcile_serving"]
+           "reconcile_serving", "reconcile_recovery"]
 
-REPORT_SCHEMA = "gnn-trace-report/v1"
+# v2: adds the recovery rule (fault.* counters/spans vs the FaultPlan's
+# books and the cost model's RecoveryEstimate)
+REPORT_SCHEMA = "gnn-trace-report/v2"
 
 
 @dataclasses.dataclass
@@ -388,4 +394,51 @@ def reconcile_serving(report, store, *, tracer: Optional[Tracer] = None,
             bounds=(0.0, 1e-9), unit="s",
             note="latency == queue span + its batch's service span, per "
                  "request (virtual clock)"))
+    return checks
+
+
+# ---------------------------------------------------------------------------
+# fault injection + recovery (the chaos accounting)
+# ---------------------------------------------------------------------------
+
+
+def reconcile_recovery(plan, *, tracer: Optional[Tracer] = None,
+                       estimates: Optional[Sequence] = None,
+                       program: str = "recovery") -> List[Check]:
+    """Reconcile a faulted run's trace against the `FaultPlan`'s own books.
+
+    The plan counts what it injected and what the run reported handled;
+    the tracer counted the same events from the run's side — the two
+    stories must agree EXACTLY, or a fault was dropped/double-counted.
+    With `estimates` (the `RecoveryEstimate`s of an elastic run) the traced
+    `fault.recovery_time_model` counter must equal their recomputed sum and
+    the run must have recorded exactly one recovery span per rescale.
+    """
+    tracer = tracer or get_tracer()
+    checks: List[Check] = []
+
+    injected = tracer.total("fault.injected")
+    checks.append(make_check(
+        "fault.injected", program, injected or 0.0,
+        plan.injected_count, unit="ops",
+        note="traced injection counter vs the plan's fired-event book"))
+    handled = tracer.total("fault.handled")
+    checks.append(make_check(
+        "fault.handled", program, handled or 0.0,
+        plan.handled_count, unit="ops",
+        note="traced handled counter vs the plan's handled-event book"))
+
+    if estimates is not None:
+        pred_total = float(sum(e.recovery_time for e in estimates))
+        meas_total = tracer.total("fault.recovery_time_model")
+        checks.append(make_check(
+            "fault.recovery_time_model", program, meas_total or 0.0,
+            pred_total, unit="s",
+            note="traced recovery-time counter vs the recomputed "
+                 "RecoveryEstimate sum (restore + re-partition + "
+                 "re-compile)"))
+        checks.append(make_check(
+            "fault.recovery_spans", program,
+            len(tracer.spans("fault.recovery")), len(estimates), unit="ops",
+            note="one fault.recovery span per executed rescale"))
     return checks

@@ -1,0 +1,144 @@
+"""Checkpoint layer hardening: atomic publish, GC, dtype round-trips,
+structure guards, corruption fallback, metadata-only reads."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    CheckpointManager,
+    checkpoint_extra,
+    restore_latest,
+    save_checkpoint,
+)
+
+
+def _tree(shift=0.0):
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3) + shift,
+                       "b": jnp.ones((3,)) * (1.0 + shift)},
+            "step": jnp.asarray(int(shift))}
+
+
+def test_atomic_publish_survives_mid_write_kill(tmp_path):
+    """A kill between the leaf writes and the rename leaves only a .tmp
+    directory — even one with a complete-looking manifest inside. Restore
+    must ignore it and manager construction must GC it."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    # fake a mid-write kill at step 2: everything written, rename never ran
+    tmp = os.path.join(d, "step_0000000002.tmp")
+    os.makedirs(tmp)
+    np.save(os.path.join(tmp, "leaf_00000.npy"), np.zeros((3,)))
+    with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+        json.dump({"step": 2, "extra": {}, "leaves": []}, fh)
+
+    step, restored = restore_latest(d, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["params"]["b"]), 2.0)
+
+    CheckpointManager(d, keep=3, every=1)  # init GCs partial dirs
+    assert not os.path.exists(tmp)
+    assert os.path.exists(os.path.join(d, "step_0000000001"))
+
+
+def test_keep_last_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, every=1)
+    for s in range(7):
+        mgr.maybe_save(s, _tree(float(s)))
+    names = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert names == [f"step_{s:010d}" for s in (4, 5, 6)]
+    step, restored = mgr.restore(_tree())
+    assert step == 6
+    np.testing.assert_array_equal(np.asarray(restored["step"]), 6)
+
+
+def test_save_every_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10, every=5)
+    saved = [s for s in range(12) if mgr.maybe_save(s, _tree(float(s)))]
+    assert saved == [0, 5, 10]
+    assert mgr.maybe_save(12, _tree(), force=True) is not None
+
+
+def test_bf16_round_trip(tmp_path):
+    """bf16 leaves are widened to f32 on disk (numpy can't serialise
+    ml_dtypes) and cast back to the target leaf's dtype on restore."""
+    tree = {"w": jnp.arange(8.0, dtype=jnp.bfloat16) / 3.0,
+            "v": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    # on-disk leaf is f32, manifest remembers the original dtype
+    (ck,) = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    with open(tmp_path / ck / "manifest.json") as fh:
+        manifest = json.load(fh)
+    by_path = {rec["path"]: rec for rec in manifest["leaves"]}
+    assert by_path["w"]["dtype"] == "bfloat16"
+    raw = np.load(tmp_path / ck / by_path["w"]["file"])
+    assert raw.dtype == np.float32
+
+    step, restored = restore_latest(str(tmp_path), jax.tree.map(
+        jnp.zeros_like, tree))
+    assert step == 0
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+def test_restore_rejects_path_mismatch(tmp_path):
+    """Same leaf count, different tree structure: restore must fail by NAME
+    instead of silently loading leaves into the wrong slots."""
+    save_checkpoint(str(tmp_path), 0, {"a": jnp.ones((2,)),
+                                       "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="mismatch at leaf 'b'"):
+        restore_latest(str(tmp_path), {"a": jnp.ones((2,)),
+                                       "c": jnp.zeros((2,))})
+
+
+def test_stray_step_dir_skipped_with_warning(tmp_path):
+    """step_final/ etc. (satellite: non-integer step_* names) must not kill
+    the scan — skipped loudly, newest REAL checkpoint still restores."""
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree(3.0))
+    stray = os.path.join(d, "step_final")
+    os.makedirs(stray)
+    with open(os.path.join(stray, "manifest.json"), "w") as fh:
+        json.dump({"step": "final", "extra": {}, "leaves": []}, fh)
+    with pytest.warns(UserWarning, match="step_final"):
+        step, restored = restore_latest(d, _tree())
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["step"]), 3)
+
+
+def test_corrupt_newest_falls_back_to_previous(tmp_path):
+    """The corrupt-ckpt fault: breaking the newest manifest makes restore
+    fall back to the previous complete checkpoint."""
+    from repro.fault import corrupt_latest_checkpoint
+
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    save_checkpoint(d, 2, _tree(2.0))
+    path = corrupt_latest_checkpoint(d, mode="manifest")
+    assert path.endswith("step_0000000002")
+    step, restored = restore_latest(d, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["step"]), 1)
+    assert corrupt_latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+def test_checkpoint_extra_reads_metadata_only(tmp_path):
+    """Resume coordinates (epoch/step/has_ef) are readable BEFORE the
+    target tree exists — and without touching any leaf file."""
+    d = str(tmp_path)
+    assert checkpoint_extra(d) == (None, {})
+    save_checkpoint(d, 7, _tree(7.0), extra={"epoch": 3, "step": 1,
+                                             "has_ef": True})
+    # leaf files should not be needed: remove them all
+    (ck,) = [n for n in os.listdir(d) if n.startswith("step_")]
+    for n in os.listdir(os.path.join(d, ck)):
+        if n.endswith(".npy"):
+            os.remove(os.path.join(d, ck, n))
+    step, extra = checkpoint_extra(d)
+    assert step == 7
+    assert extra == {"epoch": 3, "step": 1, "has_ef": True}

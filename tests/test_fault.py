@@ -1,0 +1,461 @@
+"""Fault tolerance: deterministic injection, retry, checkpoint/resume,
+elastic degrade-and-recover, serving failover (the ISSUE-10 contracts).
+
+  * spec grammar round-trips; unknown kinds fail with the valid-kind list
+  * a retried phase is BITWISE the first attempt (per-(step, worker)
+    SeedSequence re-derivation), serial and overlapped
+  * crash-and-resume reproduces the unfaulted fp32 loss trajectory
+    bitwise, mini-batch (sage + gat x serial/overlap) and full-batch
+  * elastic rescale carries lr/codec/EF state and preserves the
+    distributed==single invariant; the supervised driver shrinks and
+    grows back with priced recovery events that reconcile exactly
+  * serving worker-death answers EVERY request via the failover map
+  * the CLI exit conventions: unknown spec -> 1, injected crash -> 3
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, checkpoint_extra
+from repro.core.edge_partition import partition_edges
+from repro.core.vertex_partition import partition_vertices
+from repro.fault import (
+    FaultEscalation,
+    FaultInjector,
+    FaultPlan,
+    FaultSpecError,
+    TransientFetchFault,
+    WorkerCrash,
+    clear_fetch_hook,
+    install_fetch_hook,
+    parse_fault_spec,
+    retry_call,
+)
+from repro.fault.recovery import failover_assignment, run_elastic_fullbatch
+from repro.gnn.fullbatch import FullBatchTrainer
+from repro.gnn.minibatch import MiniBatchTrainer
+from repro.gnn.models import GNNSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _trainer(graph, node_data, *, overlap, model="sage", seed=3, **kw):
+    feats, labels, train = node_data
+    a = partition_vertices(graph, 4, "metis", seed=0)
+    spec = GNNSpec(model=model, feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    return MiniBatchTrainer.build(
+        graph, a, 4, spec, feats, labels, train,
+        global_batch=32, seed=seed, overlap=overlap, **kw)
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + plan bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_specs():
+    ev = parse_fault_spec("crash@step:3")
+    assert (ev.kind, ev.step, ev.worker) == ("crash", 3, -1)
+    ev = parse_fault_spec("straggler@step:1,worker:2,delay:0.05")
+    assert (ev.step, ev.worker, ev.delay) == (1, 2, 0.05)
+    ev = parse_fault_spec("worker-death@t:0.5,worker:1")
+    assert (ev.at, ev.worker) == (0.5, 1)
+    assert parse_fault_spec("corrupt-ckpt").kind == "corrupt-ckpt"
+
+
+def test_unknown_kind_lists_valid_kinds():
+    with pytest.raises(FaultSpecError) as ei:
+        parse_fault_spec("explode@step:1")
+    msg = str(ei.value)
+    assert "valid kinds" in msg and "crash" in msg, msg
+
+
+@pytest.mark.parametrize("spec", ["crash@step", "crash@step:x",
+                                  "crash@fuse:1"])
+def test_malformed_specs_raise(spec):
+    with pytest.raises(FaultSpecError):
+        parse_fault_spec(spec)
+
+
+def test_plan_fire_once_and_seeded_worker():
+    plan = FaultPlan.parse(["crash@step:3", "worker-death@t:0.5"], seed=7)
+    ev = plan.events[0]
+    assert plan.fire(ev) and not plan.fire(ev)
+    assert plan.injected_count == 1 and plan.handled_count == 0
+    assert plan.mark_handled(ev) and not plan.mark_handled(ev)
+    # unfired events can't be marked handled
+    assert not plan.mark_handled(plan.events[1])
+    # seeded worker choice is stable across calls and across equal plans
+    death = plan.events[1]
+    w = plan.resolve_worker(death, 4)
+    assert 0 <= w < 4
+    assert w == plan.resolve_worker(death, 4)
+    twin = FaultPlan.parse(["crash@step:3", "worker-death@t:0.5"], seed=7)
+    assert w == twin.resolve_worker(twin.events[1], 4)
+
+
+def test_retry_call_books_and_escalates():
+    plan = FaultPlan.parse(["fetch-error@step:0,worker:0"], seed=0)
+    ev = plan.events[0]
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1 and plan.fire(ev):
+            raise TransientFetchFault("injected", event=ev, plan=plan)
+        return calls["n"]
+
+    assert retry_call(flaky, phase="fetch", backoff=1e-4) == 2
+    assert plan.injected_count == plan.handled_count == 1
+
+    def always():
+        raise TransientFetchFault("down")
+
+    with pytest.raises(FaultEscalation):
+        retry_call(always, phase="fetch", attempts=2, backoff=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline seams: retried phases are bitwise the first attempt
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_retried_batches_bitwise_identical(or_graph, node_data, overlap):
+    """One straggler + one sampler fault + one fetch fault, all retried or
+    absorbed: every batch still bitwise matches the unfaulted run."""
+    plan = FaultPlan.parse([
+        "straggler@step:0,worker:1,delay:0.01",
+        "sample-error@step:1,worker:2",
+        "fetch-error@step:2,worker:0",
+    ], seed=0)
+    clean = _trainer(or_graph, node_data, overlap=overlap)
+    faulted = _trainer(or_graph, node_data, overlap=overlap,
+                       injector=FaultInjector(plan))
+    try:
+        for _ in range(4):
+            pb_c, _ = clean.engine.next_batch()
+            pb_f, _ = faulted.engine.next_batch()
+            assert pb_c.index == pb_f.index
+            _tree_equal(pb_c.stacked, pb_f.stacked)
+            np.testing.assert_array_equal(pb_c.input_vertices,
+                                          pb_f.input_vertices)
+    finally:
+        clean.close()
+        faulted.close()
+    assert plan.injected_count == 3
+    assert plan.handled_count == 3
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_crash_surfaces_as_worker_crash(or_graph, node_data, overlap):
+    """A fatal crash travels through the poison token in overlap mode and
+    arrives as WorkerCrash (not a wrapped RuntimeError) in both modes."""
+    plan = FaultPlan.parse(["crash@step:2"], seed=0)
+    tr = _trainer(or_graph, node_data, overlap=overlap,
+                  injector=FaultInjector(plan))
+    try:
+        with pytest.raises(WorkerCrash):
+            for _ in range(4):
+                tr.engine.next_batch()
+    finally:
+        tr.close()
+    assert plan.injected_count == 1
+
+
+def test_gather_seam_global_hook(or_graph, node_data):
+    """The module-level RowStore.gather hook (paths that don't thread an
+    injector): a step-agnostic fetch-error is raised at the store and
+    recovered by the pipeline's caller-side retry, bitwise."""
+    plan = FaultPlan.parse(["fetch-error@worker:1"], seed=0)
+    clean = _trainer(or_graph, node_data, overlap=False)
+    faulted = _trainer(or_graph, node_data, overlap=False)
+    install_fetch_hook(FaultInjector(plan, k=4).gather_hook())
+    try:
+        for _ in range(2):
+            pb_c, _ = clean.engine.next_batch()
+            pb_f, _ = faulted.engine.next_batch()
+            _tree_equal(pb_c.stacked, pb_f.stacked)
+    finally:
+        clear_fetch_hook()
+        clean.close()
+        faulted.close()
+    assert plan.injected_count == plan.handled_count == 1
+
+
+# ---------------------------------------------------------------------------
+# crash-and-resume: bitwise fp32 loss trajectories (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+def _run_minibatch(graph, node_data, *, overlap, model, steps, ckpt_dir=None,
+                   plan=None, start_step=0, seed=3):
+    """The gnn_train mini-batch loop in miniature: per-step checkpoints,
+    crash capture, resume via start_step + restore."""
+    mgr = CheckpointManager(ckpt_dir, keep=3, every=1) if ckpt_dir else None
+    tr = _trainer(graph, node_data, overlap=overlap, model=model, seed=seed,
+                  injector=FaultInjector(plan) if plan else None,
+                  start_step=start_step)
+    losses, crashed = [], False
+    try:
+        if mgr is not None and start_step > 0:
+            _, restored = mgr.restore(
+                {"params": tr.params, "opt_state": tr.opt_state})
+            tr.params = restored["params"]
+            tr.opt_state = restored["opt_state"]
+        for step in range(start_step, steps):
+            losses.append(tr.train_step().loss)
+            if mgr is not None:
+                mgr.maybe_save(step, {"params": tr.params,
+                                      "opt_state": tr.opt_state})
+    except WorkerCrash:
+        crashed = True
+    finally:
+        tr.close()
+    return losses, crashed
+
+
+@pytest.mark.parametrize("model", ["sage", "gat"])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_minibatch_crash_resume_bitwise(or_graph, node_data, tmp_path,
+                                        model, overlap):
+    """Kill at step 3 of 6, resume from the checkpoint: steps 3..5 must be
+    BITWISE the unfaulted oracle's (fp32, same RNG tree, same order)."""
+    oracle, crashed = _run_minibatch(or_graph, node_data, overlap=overlap,
+                                     model=model, steps=6)
+    assert not crashed and len(oracle) == 6
+    d = str(tmp_path / f"{model}-{overlap}")
+    plan = FaultPlan.parse(["crash@step:3"], seed=0)
+    pre, crashed = _run_minibatch(or_graph, node_data, overlap=overlap,
+                                  model=model, steps=6, ckpt_dir=d, plan=plan)
+    assert crashed and len(pre) == 3
+    assert pre == oracle[:3]
+    step_r, _ = checkpoint_extra(d)
+    assert step_r == 2
+    post, crashed = _run_minibatch(or_graph, node_data, overlap=overlap,
+                                   model=model, steps=6, ckpt_dir=d,
+                                   start_step=step_r + 1)
+    assert not crashed
+    assert post == oracle[3:]  # bitwise: fp32 float equality
+
+
+def test_fullbatch_crash_resume_bitwise(or_graph, node_data, tmp_path):
+    feats, labels, train = node_data
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    a = partition_edges(or_graph, 4, "hep100", seed=1)
+
+    def build():
+        return FullBatchTrainer.build(
+            or_graph, a, 4, spec, feats, labels, train, mode="sim", seed=7)
+
+    tr = build()
+    oracle = [tr.train_step() for _ in range(5)]
+
+    d = str(tmp_path / "fb")
+    mgr = CheckpointManager(d, keep=3, every=1)
+    plan = FaultPlan.parse(["crash@step:2"], seed=0)
+    injector = FaultInjector(plan, k=4)
+    tr = build()
+    pre = []
+    with pytest.raises(WorkerCrash):
+        for epoch in range(5):
+            injector.at_epoch(epoch)
+            pre.append(tr.train_step())
+            mgr.maybe_save(epoch, {"params": tr.params,
+                                   "opt_state": tr.opt_state},
+                           extra={"epoch": epoch})
+    assert pre == oracle[:2]
+
+    step_r, extra = checkpoint_extra(d)
+    assert (step_r, extra["epoch"]) == (1, 1)
+    tr = build()
+    _, restored = mgr.restore({"params": tr.params,
+                               "opt_state": tr.opt_state})
+    tr.params, tr.opt_state = restored["params"], restored["opt_state"]
+    post = [tr.train_step() for _ in range(extra["epoch"] + 1, 5)]
+    assert post == oracle[2:]
+
+
+# ---------------------------------------------------------------------------
+# elastic degrade-and-recover
+# ---------------------------------------------------------------------------
+
+
+def test_rescale_carries_runtime_state(or_graph, node_data):
+    """The satellite regression: lr, codec tier, and EF carry must survive
+    a rescale — and the distributed==single invariant must still hold."""
+    from repro.ckpt.elastic import rescale_fullbatch
+    from repro.core.wire import as_codec
+
+    feats, labels, train = node_data
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    a = partition_edges(or_graph, 4, "hdrf", seed=1)
+    # lossy-codec trainer: lr, codec name, and EF carry must transfer
+    tr = FullBatchTrainer.build(
+        or_graph, a, 4, spec, feats, labels, train, mode="sim", seed=7,
+        lr=5e-2, codec="int8")
+    tr.train_step()
+    assert tr.ef_state is not None
+    tr2 = rescale_fullbatch(tr, or_graph, 3, feats, labels, train, seed=2)
+    assert tr2.lr == tr.lr == 5e-2
+    assert as_codec(tr2.codec).name == "int8"
+    assert tr2.ef_state is not None
+    for leaf in jax.tree.leaves(tr2.ef_state):
+        assert leaf.shape[0] == 3
+    # fp32 shrink 4 -> 3: distributed==single parity must survive the
+    # rescale (the lossless path, where forward equality is exact-ish)
+    tr = FullBatchTrainer.build(
+        or_graph, a, 4, spec, feats, labels, train, mode="sim", seed=7,
+        lr=5e-2)
+    tr.train_step()
+    tr2 = rescale_fullbatch(tr, or_graph, 3, feats, labels, train, seed=2)
+    assert tr2.lr == 5e-2
+    ref = FullBatchTrainer.build(
+        or_graph, np.zeros(or_graph.num_edges, np.int32), 1, spec,
+        feats, labels, train, seed=7)
+    ref.params = tr.params
+    np.testing.assert_allclose(
+        tr2.forward_logits_global(), ref.forward_logits_global(),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_elastic_driver_shrinks_and_recovers(or_graph, node_data):
+    from repro.obs import Tracer, install, uninstall
+    from repro.obs.reconcile import reconcile_recovery
+
+    feats, labels, train = node_data
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    plan = FaultPlan.parse(["worker-loss@epoch:1,worker:2",
+                            "worker-join@epoch:3"], seed=0)
+    tracer = install(Tracer())
+    try:
+        res = run_elastic_fullbatch(
+            or_graph, feats, labels, train, spec, k=4, epochs=5, plan=plan,
+            partitioner="hep100", seed=0)
+    finally:
+        uninstall()
+    assert res.k_history == [4, 3, 3, 4, 4]
+    assert [e.action for e in res.events] == ["shrink", "grow"]
+    assert all(e.estimate.recovery_time > 0 for e in res.events)
+    assert plan.injected_count == plan.handled_count == 2
+    assert all(np.isfinite(res.losses))
+    checks = reconcile_recovery(plan, tracer=tracer,
+                                estimates=res.recovery_estimates)
+    assert checks and all(c.level == "ok" for c in checks), [
+        (c.quantity, c.message) for c in checks if c.level != "ok"]
+
+
+def test_failover_assignment_spread_and_replicas():
+    owner = np.array([0, 1, 1, 2, 0])
+    new = failover_assignment(owner, 1, 3)
+    assert not (new == 1).any()
+    # untouched vertices keep their owner; moved ones spread over survivors
+    np.testing.assert_array_equal(new[[0, 3, 4]], owner[[0, 3, 4]])
+    assert set(new[[1, 2]]) <= {0, 2}
+
+    class _Book:  # minimal replica map: vglobal[p][vmask[p]] = copies on p
+        vglobal = [np.array([0, 1, 2]), np.array([1, 3]), np.array([3, 4])]
+        vmask = [np.ones(3, bool), np.ones(2, bool), np.ones(2, bool)]
+
+    owner = np.array([0, 1, 2, 1, 2])
+    new = failover_assignment(owner, 1, 3, book=_Book())
+    # v1 has a replica on partition 0, v3 on partition 2 — both preferred
+    np.testing.assert_array_equal(new, [0, 0, 2, 2, 2])
+
+    with pytest.raises(ValueError):
+        failover_assignment(np.zeros(3, np.int64), 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving worker-death
+# ---------------------------------------------------------------------------
+
+
+def test_serving_worker_death_answers_every_request():
+    from repro.core.study import StudyCache, serve_row
+
+    cache = StudyCache()
+    spec = GNNSpec(model="sage", feature_dim=16, hidden_dim=8, num_classes=5,
+                   num_layers=2)
+    n = 120
+    plan = FaultPlan.parse(["worker-death@t:0.25,worker:1"], seed=0)
+    row = serve_row("OR", "metis", 4, spec, scale=0.02, cache=cache,
+                    qps=300.0, n_requests=n, hops=1, fanout=8,
+                    fault_plan=plan, detect_delay=0.005)
+    assert row["requests"] == n            # every request answered
+    assert row["dead_worker"] == 1
+    assert row["rerouted"] > 0
+    assert row["transition_requests"] >= row["rerouted"]
+    assert row["transition_p99"] >= row["transition_p50"] > 0.0
+    assert plan.injected_count == plan.handled_count == 1
+    # the unfaulted twin serves the same trace with no degraded columns
+    clean = serve_row("OR", "metis", 4, spec, scale=0.02, cache=cache,
+                      qps=300.0, n_requests=n, hops=1, fanout=8)
+    assert clean["requests"] == n and "transition_p99" not in clean
+
+
+# ---------------------------------------------------------------------------
+# CLI conventions (subprocess, like the examples tests)
+# ---------------------------------------------------------------------------
+
+
+def _train_cli(*argv, timeout=600):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.gnn_train", *argv],
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+def test_cli_unknown_fault_spec_exits_1():
+    r = _train_cli("--inject-fault", "explode@step:1")
+    assert r.returncode == 1, (r.returncode, r.stdout[-500:])
+    assert "valid kinds" in r.stdout
+
+
+def test_cli_crash_exit_code_and_resume(tmp_path):
+    """crash@step -> exit 3 (distinct from real failures); --resume
+    completes and reproduces the unfaulted final-epoch loss exactly.
+    (scale 0.02, batch 64 => 2 steps/epoch: step 2 is inside epoch 1.)"""
+    common = ("--graph", "OR", "--scale", "0.02", "--regime", "minibatch",
+              "--partitioner", "metis", "--k", "2", "--epochs", "2",
+              "--batch", "64", "--features", "16", "--hidden", "8",
+              "--classes", "8", "--ckpt-every", "1")
+
+    def last_loss(out):
+        vals = [ln.split("loss")[1].split()[0] for ln in out.splitlines()
+                if "] epoch" in ln and "loss" in ln]
+        assert vals, out[-800:]
+        return vals[-1]
+
+    oracle = _train_cli(*common)
+    assert oracle.returncode == 0, oracle.stderr[-2000:]
+
+    d = str(tmp_path / "ck")
+    r = _train_cli(*common, "--ckpt-dir", d, "--inject-fault", "crash@step:2")
+    assert r.returncode == 3, (r.returncode, r.stdout[-500:],
+                               r.stderr[-1000:])
+    assert "FATAL" in r.stdout and "--resume" in r.stdout
+
+    r = _train_cli(*common, "--ckpt-dir", d, "--resume")
+    assert r.returncode == 0, (r.stdout[-500:], r.stderr[-2000:])
+    assert "resumed" in r.stdout
+    assert last_loss(r.stdout) == last_loss(oracle.stdout)

@@ -405,7 +405,7 @@ def test_gnn_trace_cli_green_and_red(tmp_path):
             "--out-json", str(out_json)]
     assert gnn_trace.main(argv) == 0
     report = json.loads(out_json.read_text())
-    assert report["schema"] == "gnn-trace-report/v1"
+    assert report["schema"] == "gnn-trace-report/v2"
     assert report["counts"]["error"] == 0
     assert set(report["programs"]) == {"fullbatch-halo", "fullbatch-ring",
                                        "minibatch", "serve"}
